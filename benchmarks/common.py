@@ -1,0 +1,47 @@
+"""Shared benchmark scaffolding: a small pretrained backbone + timing."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import SyntheticTasks, TASK_CATEGORIES
+from repro.models.model import build_model
+from repro.training import pretrain
+
+EOS = 1
+
+
+def bench_backbone(arch="vicuna-7b", pretrain_steps=250, seed=0):
+    """Tiny fp32 backbone pretrained on the synthetic 6-task mixture so the
+    verifier distribution is peaked (as a real LM's is)."""
+    cfg = get_config(arch, tiny=True).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    tasks = SyntheticTasks(cfg.vocab_size, seed=seed)
+    params, _ = pretrain(model, params,
+                         tasks.stream(TASK_CATEGORIES, pretrain_steps, 16, 32,
+                                      seed=seed + 9), lr=2e-3)
+    return cfg, model, params, tasks
+
+
+def timed(fn, *args, warmup=1, iters=3):
+    """Returns (median_seconds, result)."""
+    res = None
+    for _ in range(warmup):
+        res = fn(*args)
+        jax.block_until_ready(jax.tree.leaves(res)[0])
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        res = fn(*args)
+        jax.block_until_ready(jax.tree.leaves(res)[0])
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), res
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks: interpret-mode correctness timing vs the jnp
+oracle (on TPU the same calls compile to Mosaic; here the derived column
+reports the oracle-relative error so CI catches regressions)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.lora_logits import lora_logits
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.verify_argmax import verify_argmax
+
+
+def main():
+    h = jax.random.normal(jax.random.PRNGKey(0), (64, 128))
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 2048))
+    t, (arg, mx) = timed(lambda: verify_argmax(h, w, block_t=64, block_v=512,
+                                               interpret=True))
+    arg_r, _ = ref.ref_verify_argmax(h, w)
+    emit("kernel/verify_argmax", t * 1e6,
+         f"match={bool(jnp.all(arg == arg_r))}")
+
+    a = jax.random.normal(jax.random.PRNGKey(2), (128, 16))
+    b = jax.random.normal(jax.random.PRNGKey(3), (16, 2048))
+    t, out = timed(lambda: lora_logits(h, w, a, b, 2.0, block_t=64,
+                                       block_v=512, interpret=True))
+    err = float(jnp.abs(out - ref.ref_lora_logits(h, w, a, b, 2.0)).max())
+    emit("kernel/lora_logits", t * 1e6, f"max_err={err:.2e}")
+
+    q = jax.random.normal(jax.random.PRNGKey(4), (4, 16, 64))
+    k = jax.random.normal(jax.random.PRNGKey(5), (4, 256, 4, 64))
+    v = jax.random.normal(jax.random.PRNGKey(6), (4, 256, 4, 64))
+    lens = jnp.full((4,), 200)
+    t, o = timed(lambda: decode_attention(q, k, v, lens, block_s=64,
+                                          interpret=True))
+    err = float(jnp.abs(o - ref.ref_decode_attention(q, k, v, lens)).max())
+    emit("kernel/decode_attention", t * 1e6, f"max_err={err:.2e}")
+
+    xh = jax.random.normal(jax.random.PRNGKey(7), (2, 128, 8, 32))
+    Bc = jax.random.normal(jax.random.PRNGKey(8), (2, 128, 1, 64)) * 0.5
+    Cc = jax.random.normal(jax.random.PRNGKey(9), (2, 128, 1, 64)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(10), (2, 128, 8)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(11), (8,)) * 0.3)
+    t, (y, hf) = timed(lambda: ssd_scan(xh, Bc, Cc, dt, A, chunk=64,
+                                        interpret=True))
+    y_r, _ = ref.ref_ssd_scan(xh, Bc, Cc, dt, A, 64)
+    emit("kernel/ssd_scan", t * 1e6,
+         f"max_err={float(jnp.abs(y - y_r).max()):.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Roofline report (deliverable g): reads experiments/dryrun/*.json and
+derives the three roofline terms per (arch x shape) on the single-pod mesh,
+plus dominant bottleneck, MODEL_FLOPS ratio, and a what-would-move-it note.
+Writes experiments/roofline.md and prints a benchmark CSV line per pair.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.dryrun import adapt_config
+from repro.roofline import roofline_from_record, suggestion
+
+
+def load_records(path="experiments/dryrun", mesh="16x16"):
+    recs = {}
+    for f in glob.glob(os.path.join(path, f"*_{mesh}.json")):
+        d = json.load(open(f))
+        if "+" in d["arch"]:        # variant runs (e.g. +kvq) live in §Perf
+            continue
+        recs[(d["arch"], d["shape"])] = d
+    return recs
+
+
+def main():
+    recs = load_records()
+    rows = []
+    for (arch, shape_name), rec in sorted(recs.items()):
+        if rec["status"] == "skip":
+            rows.append((arch, shape_name, None, rec.get("note", "")))
+            continue
+        if rec["status"] != "ok":
+            rows.append((arch, shape_name, None,
+                         "FAIL: " + rec.get("error", "")[:80]))
+            continue
+        cfg, _ = adapt_config(arch, INPUT_SHAPES[shape_name])
+        rl = roofline_from_record(rec, cfg, INPUT_SHAPES[shape_name])
+        rl["note"] = suggestion(rl)
+        rows.append((arch, shape_name, rl, rec.get("note", "")))
+        emit(f"roofline/{arch}/{shape_name}", rl["bound_s"] * 1e6,
+             f"dominant={rl['dominant']};compute_s={rl['compute_s']:.3g};"
+             f"memory_s={rl['memory_s']:.3g};"
+             f"collective_s={rl['collective_s']:.3g};"
+             f"useful_ratio={rl['useful_flops_ratio']:.2f};"
+             f"peak_gib={rl['peak_mem_gib']:.1f}")
+
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline.md", "w") as f:
+        f.write("# Roofline (single-pod 16x16, TPU v5e: 197 TF/s bf16, "
+                "819 GB/s HBM, ~50 GB/s/link ICI)\n\n")
+        f.write("| arch | shape | compute (s) | memory (s) | collective (s) "
+                "| dominant | useful FLOP ratio | peak GiB/dev | fits | "
+                "what moves it |\n|---|---|---|---|---|---|---|---|---|---|\n")
+        for arch, shape, rl, note in rows:
+            if rl is None:
+                f.write(f"| {arch} | {shape} | — | — | — | skip/fail | — | — "
+                        f"| — | {note} |\n")
+                continue
+            f.write(f"| {arch} | {shape} | {rl['compute_s']:.3g} | "
+                    f"{rl['memory_s']:.3g} | {rl['collective_s']:.3g} | "
+                    f"**{rl['dominant']}** | {rl['useful_flops_ratio']:.2f} | "
+                    f"{rl['peak_mem_gib']:.1f} | "
+                    f"{'y' if rl['fits_hbm'] else 'N'} | {rl['note']} |\n")
+    print("# wrote experiments/roofline.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table2,roofline] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = ["kernels", "table1", "table2", "table3", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced training budgets (smoke)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(SUITES)
+
+    print("name,us_per_call,derived")
+    for suite in SUITES:
+        if suite not in only:
+            continue
+        t0 = time.time()
+        try:
+            if suite == "kernels":
+                from benchmarks import kernels_bench
+                kernels_bench.main()
+            elif suite == "table1":
+                from benchmarks import table1_budget
+                table1_budget.main()
+            elif suite == "table2":
+                from benchmarks import table2_specbench
+                table2_specbench.main(train_batches=40 if args.fast else 150)
+            elif suite == "table3":
+                from benchmarks import table3_ablations
+                if args.fast:
+                    table3_ablations.TRAIN_BATCHES = 30
+                table3_ablations.main()
+            elif suite == "roofline":
+                from benchmarks import roofline_report
+                roofline_report.main()
+        except Exception:   # noqa: BLE001 — report and continue
+            print(f"{suite}/ERROR,0,{traceback.format_exc().splitlines()[-1]}",
+                  file=sys.stderr)
+            traceback.print_exc()
+        print(f"# {suite} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Quickstart: Draft, Verify, & Improve in ~60 lines.
+
+Builds a tiny Vicuna-family backbone, pretrains it briefly on a synthetic
+task mixture (so the verifier is peaked, like a real LM), then:
+
+ 1. decodes greedily (AR baseline),
+ 2. decodes with DVI self-speculation (losslessly — same tokens),
+ 3. runs the online KL->RL loop and shows acceptance/MAT climbing.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import lora, online, spec
+from repro.data import SyntheticTasks, TASK_CATEGORIES
+from repro.models.model import build_model
+from repro.training import pretrain
+
+
+def main():
+    cfg = get_config("vicuna-7b", tiny=True).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tasks = SyntheticTasks(cfg.vocab_size, seed=0)
+
+    print("== pretraining the backbone (substrate) ==")
+    params, losses = pretrain(model, params,
+                              tasks.stream(TASK_CATEGORIES, 200, 16, 32, seed=9),
+                              lr=2e-3, log_every=100)
+
+    prompts = jnp.asarray(tasks.sample("qa", 4, 12, seed=5))
+
+    print("\n== 1) greedy AR decoding (the target distribution) ==")
+    t0 = time.perf_counter()
+    r_ar = spec.ar_generate(model, params, prompts, 48)
+    t_ar = time.perf_counter() - t0
+    print(f"   {int(r_ar.committed)} tokens in {t_ar:.2f}s")
+
+    print("\n== 2) DVI self-speculation (drafter untrained -> static self-spec) ==")
+    dvi_params = lora.init_draft_params(jax.random.PRNGKey(5), cfg)
+    r_sd = spec.speculative_generate(model, params, dvi_params, prompts, 48)
+    same = all(bool(jnp.all(
+        r_ar.tokens[b, :min(int(r_ar.lengths[b]), int(r_sd.lengths[b]))] ==
+        r_sd.tokens[b, :min(int(r_ar.lengths[b]), int(r_sd.lengths[b]))]))
+        for b in range(4))
+    print(f"   lossless vs AR: {same}   "
+          f"MAT={float(r_sd.committed)/float(r_sd.blocks):.2f}")
+
+    print("\n== 3) Improve: online KL->RL drafter training ==")
+    state = online.init_trainer(model, jax.random.PRNGKey(7))
+    stream = tasks.stream(TASK_CATEGORIES, 60, 8, 16, seed=1)
+    state, hist = online.online_loop(model, params, stream, state,
+                                     max_new=24, lr=3e-3, log_every=20)
+    print(f"   block acceptance {np.mean(hist['block_acc'][:8]):.2f} -> "
+          f"{np.mean(hist['block_acc'][-8:]):.2f}; "
+          f"MAT {np.mean(hist['mat'][:8]):.2f} -> "
+          f"{np.mean(hist['mat'][-8:]):.2f}")
+
+    print("\n== 4) trained drafter: wall-time speedup (still lossless) ==")
+    gen = jax.jit(lambda pr: spec.speculative_generate(
+        model, params, state.dvi_params, pr, 48))
+    gen(prompts)          # compile
+    t0 = time.perf_counter()
+    r_tr = gen(prompts)
+    jax.block_until_ready(r_tr.tokens)
+    t_sd = time.perf_counter() - t0
+    ar = jax.jit(lambda pr: spec.ar_generate(model, params, pr, 48))
+    ar(prompts)
+    t0 = time.perf_counter()
+    jax.block_until_ready(ar(prompts).tokens)
+    t_ar = time.perf_counter() - t0
+    print(f"   AR {t_ar:.2f}s vs DVI {t_sd:.2f}s -> {t_ar/t_sd:.2f}x speedup, "
+          f"MAT={float(r_tr.committed)/float(r_tr.blocks):.2f}")
+
+
+if __name__ == "__main__":
+    main()

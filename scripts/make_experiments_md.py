@@ -1,0 +1,114 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from
+experiments/dryrun/*.json (§Dry-run, §Roofline tables).  Hand-written
+sections (§Setup, §Paper-claims, §Perf log) live in EXPERIMENTS.md between
+markers and are preserved.
+
+  PYTHONPATH=src python scripts/make_experiments_md.py
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import INPUT_SHAPES  # noqa: E402
+from repro.launch.dryrun import adapt_config  # noqa: E402
+from repro.roofline import roofline_from_record, suggestion  # noqa: E402
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_b(x):
+    for unit, div in (("TiB", 2**40), ("GiB", 2**30), ("MiB", 2**20)):
+        if x >= div:
+            return f"{x/div:.2f} {unit}"
+    return f"{x:.0f} B"
+
+
+def load(mesh):
+    recs = {}
+    for f in glob.glob(f"experiments/dryrun/*_{mesh}.json"):
+        d = json.load(open(f))
+        if "+" in d["arch"]:        # variant runs (e.g. +kvq) live in §Perf
+            continue
+        recs[(d["arch"], d["shape"])] = d
+    return recs
+
+
+def dryrun_table():
+    single = load("16x16")
+    multi = load("2x16x16")
+    lines = ["| arch | shape | 16x16 | peak GiB/dev | dotFLOPs/dev | "
+             "wire GiB/dev | 2x16x16 | peak GiB/dev | note |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    n_ok = n_skip = n_fail = 0
+    for shape in SHAPES:
+        for (arch, sh), rec in sorted(single.items()):
+            if sh != shape:
+                continue
+            m = multi.get((arch, sh), {"status": "—"})
+            st = rec["status"]
+            n_ok += st == "ok"
+            n_skip += st == "skip"
+            n_fail += st not in ("ok", "skip")
+            if st == "ok":
+                peak = f"{rec['memory']['peak_bytes']/2**30:.1f}"
+                fl = f"{rec['cost']['dot_flops_per_device']:.3g}"
+                wire = f"{rec['collectives']['total']['wire_bytes']/2**30:.2f}"
+            else:
+                peak = fl = wire = "—"
+            mp_st = m.get("status", "—")
+            mp_peak = (f"{m['memory']['peak_bytes']/2**30:.1f}"
+                       if mp_st == "ok" else "—")
+            note = rec.get("note") or rec.get("error", "")[:60] or ""
+            lines.append(f"| {arch} | {shape} | {st} | {peak} | {fl} | "
+                         f"{wire} | {mp_st} | {mp_peak} | {note} |")
+    lines.append("")
+    lines.append(f"**Totals (16x16):** {n_ok} ok / {n_skip} documented skips "
+                 f"/ {n_fail} fail.")
+    return "\n".join(lines)
+
+
+def roofline_table():
+    single = load("16x16")
+    lines = ["| arch | shape | compute (ms) | memory (ms) | collective (ms) |"
+             " dominant | useful ratio | 6ND (global PF) | next move |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for shape in SHAPES:
+        for (arch, sh), rec in sorted(single.items()):
+            if sh != shape or rec["status"] != "ok":
+                continue
+            cfg, _ = adapt_config(arch, INPUT_SHAPES[sh])
+            rl = roofline_from_record(rec, cfg, INPUT_SHAPES[sh])
+            lines.append(
+                f"| {arch} | {shape} | {rl['compute_s']*1e3:.3g} | "
+                f"{rl['memory_s']*1e3:.3g} | {rl['collective_s']*1e3:.3g} | "
+                f"**{rl['dominant']}** | {rl['useful_flops_ratio']:.2f} | "
+                f"{rl['model_flops_6nd']/1e15:.3g} | {suggestion(rl)[:60]} |")
+    return "\n".join(lines)
+
+
+def main():
+    path = "EXPERIMENTS.md"
+    text = open(path).read() if os.path.exists(path) else ""
+    dr = ("<!-- DRYRUN:BEGIN -->\n\n" + dryrun_table()
+          + "\n\n<!-- DRYRUN:END -->")
+    rf = ("<!-- ROOFLINE:BEGIN -->\n\n" + roofline_table()
+          + "\n\n<!-- ROOFLINE:END -->")
+    if "<!-- DRYRUN:BEGIN -->" in text:
+        text = re.sub(r"<!-- DRYRUN:BEGIN -->.*?<!-- DRYRUN:END -->", dr,
+                      text, flags=re.S)
+        text = re.sub(r"<!-- ROOFLINE:BEGIN -->.*?<!-- ROOFLINE:END -->", rf,
+                      text, flags=re.S)
+    else:
+        text += "\n## Dry-run\n" + dr + "\n\n## Roofline\n" + rf + "\n"
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

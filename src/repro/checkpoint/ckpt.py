@@ -1,0 +1,57 @@
+"""Pytree checkpointing to .npz (no orbax dependency).
+
+Keys are '/'-joined pytree paths; dtypes/shapes restored exactly.  For DVI
+serving, ``save_lora`` checkpoints ONLY the trainable adapters + trainer
+scalars — the artifact of continual learning is a few MB regardless of
+backbone size (the paper's "single-model deployment" story: the backbone
+checkpoint never changes).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure (and dtypes) of `like`."""
+    with np.load(path if path.endswith(".npz") else path + ".npz") as data:
+        flat_like = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for pathk, leaf in flat_like[0]:
+            key = "/".join(
+                str(p.key) if hasattr(p, "key") else str(p.idx) for p in pathk)
+            arr = data[key]
+            assert arr.shape == leaf.shape, f"{key}: {arr.shape} vs {leaf.shape}"
+            leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(flat_like[1], leaves)
+
+
+def save_lora(path: str, dvi_params: dict, step=0, baseline=0.0) -> None:
+    save_checkpoint(path, {"dvi": dvi_params,
+                           "meta": {"step": jnp.int32(step),
+                                    "baseline": jnp.float32(baseline)}})
+
+
+def load_lora(path: str, like_dvi: dict):
+    like = {"dvi": like_dvi, "meta": {"step": jnp.int32(0),
+                                      "baseline": jnp.float32(0.0)}}
+    tree = load_checkpoint(path, like)
+    return tree["dvi"], int(tree["meta"]["step"]), float(tree["meta"]["baseline"])

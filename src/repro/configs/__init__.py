@@ -1,0 +1,44 @@
+"""Architecture registry: the 10 assigned configs + the paper's Vicuna-7B."""
+from __future__ import annotations
+
+from repro.configs.base import (DVIConfig, EncoderConfig, InputShape,
+                                INPUT_SHAPES, MLAConfig, ModelConfig,
+                                MoEConfig, RGLRUConfig, SSMConfig,
+                                VisionStubConfig)
+from repro.configs import (deepseek_v3_671b, llama3_405b,
+                           llama4_scout_17b_a16e, mamba2_370m, paligemma_3b,
+                           qwen25_14b, qwen3_0_6b, qwen3_1_7b,
+                           recurrentgemma_9b, vicuna_7b, whisper_large_v3)
+
+_MODULES = {
+    "llama3-405b": llama3_405b,
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "qwen2.5-14b": qwen25_14b,
+    "llama4-scout-17b-a16e": llama4_scout_17b_a16e,
+    "paligemma-3b": paligemma_3b,
+    "whisper-large-v3": whisper_large_v3,
+    "qwen3-0.6b": qwen3_0_6b,
+    "mamba2-370m": mamba2_370m,
+    "deepseek-v3-671b": deepseek_v3_671b,
+    "qwen3-1.7b": qwen3_1_7b,
+    "vicuna-7b": vicuna_7b,
+}
+
+ASSIGNED_ARCHS = [n for n in _MODULES if n != "vicuna-7b"]
+ALL_ARCHS = list(_MODULES)
+
+
+def get_config(name: str, *, tiny: bool = False) -> ModelConfig:
+    base = name[:-5] if name.endswith("-tiny") else name
+    if base not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ALL_ARCHS}")
+    cfg = _MODULES[base].TINY if (tiny or name.endswith("-tiny")) else _MODULES[base].CONFIG
+    cfg.validate()
+    return cfg
+
+
+__all__ = [
+    "ALL_ARCHS", "ASSIGNED_ARCHS", "DVIConfig", "EncoderConfig", "INPUT_SHAPES",
+    "InputShape", "MLAConfig", "ModelConfig", "MoEConfig", "RGLRUConfig",
+    "SSMConfig", "VisionStubConfig", "get_config",
+]

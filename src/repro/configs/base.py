@@ -1,0 +1,257 @@
+"""Configuration system for the DVI reproduction framework.
+
+Every assigned architecture gets a ``ModelConfig`` (exact published sizes)
+plus a ``tiny()`` reduced variant used by CPU smoke tests.  The DVI
+technique itself is configured by ``DVIConfig`` and is attachable to any
+architecture (self-speculation splits the decoder stack at ``split_layer``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0
+    d_ff_shared: int = 0
+    router_aux_weight: float = 0.01
+    capacity_factor: float = 1.25   # full-sequence dispatch; decode is dropless
+    # layers 0..first_dense_layers-1 use a dense FFN instead of MoE
+    first_dense_layers: int = 0
+    d_ff_dense: int = 0
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V3 multi-head latent attention [arXiv:2412.19437]."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 SSD block [arXiv:2405.21060]."""
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk_size: int = 128
+    ngroups: int = 1
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """RecurrentGemma RG-LRU recurrent block [arXiv:2402.19427]."""
+    lru_width: int = 0          # 0 => d_model
+    d_conv: int = 4
+    block_pattern: Tuple[str, ...] = ("rglru", "rglru", "local")  # 1:2 attn:recurrent
+    local_window: int = 2048
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Audio/vision encoder backbone (frontend stubbed to embeddings)."""
+    num_layers: int
+    num_frames: int            # precomputed frame/patch positions fed by input_specs()
+    d_model: int = 0           # 0 => same as decoder d_model
+    num_heads: int = 0
+
+
+@dataclass(frozen=True)
+class VisionStubConfig:
+    """VLM prefix: precomputed patch embeddings prepended to the text tokens."""
+    num_patches: int
+    d_embed: int               # dim of incoming patch embeddings (pre-projector)
+
+
+@dataclass(frozen=True)
+class DVIConfig:
+    """Draft, Verify, & Improve (the paper's technique)."""
+    split_layer: int = 2          # draft path = layers [0, split_layer)
+    k_spec: int = 4               # proposal depth
+    lora_rank: int = 64
+    lora_alpha: float = 128.0     # gamma_s = alpha / rank
+    # loss weights (L_fast)
+    lambda_kl0: float = 1.0       # lambda_0: KL weight during warmup
+    lambda_kl_min: float = 0.1
+    lambda_pg_max: float = 1.0
+    w_ce: float = 0.5
+    w_ent: float = 0.001
+    kd_temperature: float = 2.0   # tau for p_phi^(tau)
+    # on-policy correction (L_policy)
+    w_rl: float = 0.5
+    beta0: float = 0.3            # beta(t) init, decays to beta_min
+    beta_min: float = 0.03
+    beta_decay_steps: int = 1000
+    baseline_ema: float = 0.95    # EMA of recent rewards (variance-reduction baseline b)
+    # schedule
+    warmup_steps: int = 200       # T_warmup: KL-only
+    ramp_steps: int = 400         # T_ramp: linear KL->RL
+    # buffer
+    buffer_slots: int = 4096
+    batch_size: int = 256         # tuples per update minibatch
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                 # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 => d_model // num_heads
+    # attention flavor
+    qk_norm: bool = False          # per-head RMSNorm on q,k (Qwen3)
+    qkv_bias: bool = False         # (Qwen2.5)
+    rope_theta: float = 10000.0
+    sliding_window: int = 0        # 0 => full attention
+    global_attn_every: int = 0     # >0: every Nth layer is full-attn (llama4 iRoPE-style)
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    act: str = "silu"              # silu (SwiGLU) | gelu (GeGLU / plain)
+    glu: bool = True
+    # sub-configs
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    vision: Optional[VisionStubConfig] = None
+    dvi: DVIConfig = field(default_factory=DVIConfig)
+    # MTP (DeepSeek-V3 multi-token prediction) auxiliary head
+    mtp_depth: int = 0
+    # int8 KV cache (per-slot per-kv-head symmetric scales); halves decode
+    # cache bytes — beyond-paper serving optimization, EXPERIMENTS.md §Perf H5
+    kv_quant: bool = False
+    dtype: str = "bfloat16"
+    citation: str = ""
+
+    # ---- derived ----
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def layer_pattern(self) -> Tuple[str, ...]:
+        """Repeating per-layer block pattern, length divides num_layers."""
+        if self.arch_type == "ssm":
+            return ("ssm",)
+        if self.rglru is not None:
+            return self.rglru.block_pattern
+        if self.global_attn_every and self.sliding_window:
+            pat = ["local"] * self.global_attn_every
+            pat[-1] = "attn"
+            return tuple(pat)
+        if self.sliding_window:
+            return ("local",)
+        return ("attn",)
+
+    def validate(self) -> None:
+        assert self.arch_type in ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+        if self.arch_type != "ssm":
+            assert self.num_heads % max(self.num_kv_heads, 1) == 0, "GQA group size"
+        # NOTE: layer_pattern period need not divide num_layers; the
+        # transformer stacks full periods via lax.scan and unrolls the tail
+        # (e.g. RecurrentGemma-9B: 38 = 12*(r,r,l) + (r,r)).
+        assert 0 < self.dvi.split_layer < self.num_layers
+        if self.moe is not None:
+            assert self.moe.top_k <= self.moe.num_experts
+            assert self.moe.first_dense_layers < self.num_layers
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks + head)."""
+        d, L, V = self.d_model, self.num_layers, self.vocab_size
+        hd = self.resolved_head_dim
+        n = V * d                                   # embed
+        if not self.tie_embeddings:
+            n += V * d                              # lm head
+        per_layer_attn = 0
+        if self.mla is not None:
+            m = self.mla
+            per_layer_attn = (
+                d * m.q_lora_rank
+                + m.q_lora_rank * self.num_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                + m.kv_lora_rank * self.num_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                + self.num_heads * m.v_head_dim * d)
+        elif self.arch_type == "ssm":
+            s = self.ssm
+            d_in = s.expand * d
+            per_layer_attn = d * (2 * d_in + 2 * s.ngroups * s.d_state + d_in // s.head_dim) \
+                + d_in * d
+        else:
+            per_layer_attn = d * (self.num_heads + 2 * self.num_kv_heads) * hd \
+                + self.num_heads * hd * d
+        glu_mult = 3 if self.glu else 2
+        if self.moe is not None:
+            mo = self.moe
+            moe_layers = L - mo.first_dense_layers
+            ffn = mo.first_dense_layers * glu_mult * d * (mo.d_ff_dense or self.d_ff)
+            ffn += moe_layers * (
+                mo.num_experts * glu_mult * d * mo.d_ff_expert
+                + mo.num_shared_experts * glu_mult * d * (mo.d_ff_shared or mo.d_ff_expert)
+                + d * mo.num_experts)
+        elif self.arch_type == "ssm":
+            ffn = 0
+        else:
+            ffn = L * glu_mult * d * self.d_ff
+        n += L * per_layer_attn + ffn + 2 * L * d
+        if self.encoder is not None:
+            e = self.encoder
+            ed = e.d_model or d
+            # encoder self-attn + ffn + decoder cross-attn
+            n += e.num_layers * (4 * ed * ed + glu_mult * ed * self.d_ff)
+            n += L * 4 * d * ed
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k + shared experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        mo = self.moe
+        d, L = self.d_model, self.num_layers
+        glu_mult = 3 if self.glu else 2
+        moe_layers = L - mo.first_dense_layers
+        dense_total = self.param_count() - moe_layers * (
+            mo.num_experts * glu_mult * d * mo.d_ff_expert)
+        return dense_total + moe_layers * mo.top_k * glu_mult * d * mo.d_ff_expert
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes assigned to this paper.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k":    InputShape("train_4k",    4_096,   256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  InputShape("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   InputShape("long_500k",   524_288, 1,   "decode"),
+}

@@ -1,0 +1,238 @@
+"""Comparison baselines from the paper's Table 2 / Table 3.
+
+* ``ar_generate``           — vanilla greedy AR (the 1.00x reference; in spec.py).
+* ``two_model_generate``    — classic SD (Leviathan'23 / SpS): a separate
+                              small drafter LM proposes K tokens, the target
+                              verifies in one pass.
+* static self-speculation   — Zhang'23-style: DVI geometry with an
+                              *untrained* draft head (LoRA B=0 at init means
+                              the drafter is exactly the frozen verifier head
+                              read at layer k) — i.e. DVI at step 0.
+* KL-only / PG-only / CE-only — the paper's §4.3 single-term ablations:
+                              ``online_loop(..., mode='kl'|'pg'|'ce')``.
+* ``MedusaLite``            — Medusa-style time-independent extra heads on
+                              h_L, sequential (non-tree) verification, heads
+                              trained offline with teacher-forced CE.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spec import GenResult
+from repro.models import transformer as tfm
+from repro.models.layers import dense_init, rms_norm, split_keys
+from repro.models.model import Model
+from repro.optim import adamw_init, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# Two-model speculative decoding (SpS)
+# ---------------------------------------------------------------------------
+
+def two_model_generate(target: Model, t_params: dict, draft: Model,
+                       d_params: dict, prompts: jax.Array, max_new: int,
+                       k_spec: int = 4, eos_id: int = 1,
+                       cache_len: Optional[int] = None) -> GenResult:
+    """Classic lossless SD with a separate drafter LM (greedy).
+
+    Both models run their own KV cache — exactly the system overhead DVI's
+    single-model geometry removes (paper §1)."""
+    K = k_spec
+    B, Tp = prompts.shape
+    total = Tp + max_new + K + 2
+    cap = cache_len or (total + tfm.RING_SLACK)
+
+    _, t_cache, _ = target.prefill(t_params, prompts[:, :Tp - 1], max_len=cap)
+    _, d_cache, _ = draft.prefill(d_params, prompts[:, :Tp - 1], max_len=cap)
+    pending = prompts[:, Tp - 1]
+    out = jnp.zeros((B, total), jnp.int32).at[:, :Tp].set(prompts)
+    out_len = jnp.full((B,), Tp, jnp.int32)
+    done = jnp.zeros((B,), bool)
+    stats = {k: jnp.int32(0) for k in ("blocks", "committed",
+                                       "accepted_drafts", "drafted")}
+
+    def draft_iter(carry, _):
+        dc, pend = carry
+        x = draft.embed_block(d_params, pend[:, None], dc["lengths"])
+        h, dc2, cands, _ = draft.step(d_params, x, dc)
+        logits = draft.logits(d_params, h[:, 0])
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        dc3 = tfm.commit_cache(draft.cfg, dc2, cands, jnp.ones((B,), jnp.int32))
+        return (dc3, tok), tok
+
+    def body(carry):
+        out, out_len, pending, done, t_cache, d_cache, stats = carry
+        t0t = t_cache["lengths"]
+        t0d = d_cache["lengths"]
+        (d_cache_d, _), d_s = jax.lax.scan(draft_iter, (d_cache, pending),
+                                           None, length=K)
+        d_blk = jnp.moveaxis(d_s, 0, 1)                      # (B, K)
+        # target verifies tokens [pending, d_1..d_K] in one pass
+        tok_blk = jnp.concatenate([pending[:, None], d_blk], axis=1)  # (B,K+1)
+        x = target.embed_block(t_params, tok_blk, t0t)
+        h, t_cache2, t_cands, _ = target.step(t_params, x, t_cache)
+        y_star = jnp.argmax(target.logits(t_params, h), axis=-1).astype(jnp.int32)
+        matches = (d_blk == y_star[:, :K])
+        m = jnp.sum(jnp.cumprod(matches.astype(jnp.int32), axis=1), axis=1)
+        accept = jnp.where(done, 0, m + 1)
+        t_cache3 = tfm.commit_cache(target.cfg, t_cache2, t_cands, accept)
+
+        # drafter cache consumed K feeds from t0d; roll back to t0d + accept
+        # (accept <= K+1; the (K+1)-th token was never fed to the drafter, so
+        # clamp to K and let the next block re-feed)
+        d_accept = jnp.where(done, 0, jnp.minimum(accept, K))
+        d_cands = jax.tree.map(lambda a: a, {})  # attn-only drafters: none
+        d_cache3 = dict(d_cache_d, lengths=t0d + d_accept)
+
+        ar = jnp.arange(K + 1)
+        y_at_m = jnp.take_along_axis(y_star, m[:, None], axis=1)[:, 0]
+        commit_vec = jnp.where(ar[None, :] < m[:, None],
+                               jnp.pad(d_blk, ((0, 0), (0, 1))), y_at_m[:, None])
+        out = jax.vmap(lambda o, cv, s: jax.lax.dynamic_update_slice(o, cv, (s,)))(
+            out, commit_vec, out_len)
+        emitted_eos = jnp.any((ar[None, :] < accept[:, None])
+                              & (commit_vec == eos_id), axis=1)
+        out_len = out_len + accept
+        new_done = done | emitted_eos | (out_len >= Tp + max_new)
+        new_pending = jnp.where(done, pending, y_at_m)
+        live = (~done).astype(jnp.int32)
+        stats2 = {"blocks": stats["blocks"] + live.sum(),
+                  "committed": stats["committed"] + accept.sum(),
+                  "accepted_drafts": stats["accepted_drafts"] + (m * live).sum(),
+                  "drafted": stats["drafted"] + K * live.sum()}
+        return (out, out_len, new_pending, new_done, t_cache3, d_cache3, stats2)
+
+    carry = (out, out_len, pending, done, t_cache, d_cache, stats)
+    out, out_len, *_, stats = jax.lax.while_loop(lambda c: ~jnp.all(c[3]),
+                                                 body, carry)
+    return GenResult(out, out_len, stats["blocks"], stats["committed"],
+                     stats["accepted_drafts"], stats["drafted"], None)
+
+
+# ---------------------------------------------------------------------------
+# Medusa-lite: extra time-independent heads on h_L, sequential verification
+# ---------------------------------------------------------------------------
+
+def init_medusa_heads(key, model: Model, num_heads: int = 3) -> dict:
+    cfg = model.cfg
+    ks = split_keys(key, num_heads)
+    # residual-block head per Medusa: W2 silu(W1 h) + h  -> lm_head
+    return {"w1": jnp.stack([dense_init(k, (cfg.d_model, cfg.d_model),
+                                        jnp.float32, scale=0.01) for k in ks]),
+            }
+
+
+def medusa_head_logits(model: Model, params: dict, heads: dict, h: jax.Array):
+    """h (..., d) -> (num_heads, ..., V)."""
+    def one(w1):
+        z = h + jax.nn.silu(h.astype(jnp.float32) @ w1).astype(h.dtype)
+        return model.logits(params, z)
+    return jax.vmap(one)(heads["w1"])
+
+
+def train_medusa_heads(model: Model, params: dict, heads: dict, data_stream,
+                       lr: float = 1e-3, log_every: int = 0):
+    """Offline teacher-forced CE: head i predicts token t+2+i from h_L(t)."""
+    opt = adamw_init(heads)
+    n_heads = heads["w1"].shape[0]
+
+    @jax.jit
+    def step(heads, opt, tokens):
+        def loss_fn(hd):
+            x = model.embed(params, tokens)
+            h, _, _ = model.hidden(params, x)
+            losses = []
+            for i in range(n_heads):
+                off = 2 + i
+                hh = h[:, :-off]
+                logits = medusa_head_logits(model, params,
+                                            {"w1": hd["w1"][i:i+1]}, hh)[0]
+                logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+                tgt = tokens[:, off:]
+                losses.append(-jnp.take_along_axis(
+                    logp, tgt[..., None], axis=-1).mean())
+            return sum(losses) / n_heads
+        loss, grads = jax.value_and_grad(loss_fn)(heads)
+        heads, opt, _ = adamw_update(heads, grads, opt, lr)
+        return heads, opt, loss
+
+    for i, tokens in enumerate(data_stream):
+        heads, opt, loss = step(heads, opt, tokens)
+        if log_every and (i + 1) % log_every == 0:
+            print(f"[medusa] step {i+1}: loss={float(loss):.4f}")
+    return heads
+
+
+def medusa_generate(model: Model, params: dict, heads: dict, prompts,
+                    max_new: int, eos_id: int = 1,
+                    cache_len: Optional[int] = None) -> GenResult:
+    """Sequential (non-tree) Medusa decoding: block = [lm(h), head_i(h)...]."""
+    n_heads = heads["w1"].shape[0]
+    K = 1 + n_heads
+    B, Tp = prompts.shape
+    total = Tp + max_new + K + 2
+    cap = cache_len or (total + tfm.RING_SLACK)
+    h_last, cache, _ = model.prefill(params, prompts[:, :Tp - 1], max_len=cap)
+    pending = prompts[:, Tp - 1]
+    out = jnp.zeros((B, total), jnp.int32).at[:, :Tp].set(prompts)
+    out_len = jnp.full((B,), Tp, jnp.int32)
+    done = jnp.zeros((B,), bool)
+    stats = {k: jnp.int32(0) for k in ("blocks", "committed",
+                                       "accepted_drafts", "drafted")}
+
+    def body(carry):
+        out, out_len, pending, done, cache, stats = carry
+        t0 = cache["lengths"]
+        # 1 target step on pending -> h; lm + medusa heads propose K tokens
+        x = model.embed_block(params, pending[:, None], t0)
+        h, cache1, cands1, _ = model.step(params, x, cache)
+        cache1 = tfm.commit_cache(model.cfg, cache1, cands1,
+                                  jnp.ones((B,), jnp.int32))
+        h0 = h[:, 0]
+        lm_tok = jnp.argmax(model.logits(params, h0), -1).astype(jnp.int32)
+        head_logits = medusa_head_logits(model, params, heads, h0)
+        head_toks = jnp.argmax(head_logits, -1).astype(jnp.int32)   # (nh, B)
+        d_blk = jnp.concatenate([lm_tok[:, None], head_toks.T], axis=1)  # (B,K)
+        # verify d_blk through the target in one pass
+        xb = model.embed_block(params, d_blk, cache1["lengths"])
+        hb, cache2, cands2, _ = model.step(params, xb, cache1)
+        y_star = jnp.argmax(model.logits(params, hb), -1).astype(jnp.int32)
+        # d_blk[0] == lm_tok is by construction the target's token (always
+        # accepted); matches for proposals 2..K
+        matches = (d_blk[:, 1:] == y_star[:, :K - 1])
+        m = 1 + jnp.sum(jnp.cumprod(matches.astype(jnp.int32), axis=1), axis=1)
+        accept = jnp.where(done, 0, m + 1)
+        # cache1 already advanced 1 (the pending feed); block feeds advance
+        # accept-1 more of the K feeds
+        blk_accept = jnp.where(done, 0, jnp.minimum(m, K))
+        cache3 = tfm.commit_cache(model.cfg, cache2, cands2, blk_accept)
+        cache3 = dict(cache3, lengths=jnp.where(done, t0, t0 + 1 + blk_accept))
+
+        ar = jnp.arange(K + 1)
+        y_at = jnp.take_along_axis(y_star, jnp.maximum(m - 1, 0)[:, None],
+                                   axis=1)[:, 0]
+        commit_vec = jnp.where(ar[None, :] < m[:, None],
+                               jnp.pad(d_blk, ((0, 0), (0, 1))), y_at[:, None])
+        out = jax.vmap(lambda o, cv, s: jax.lax.dynamic_update_slice(o, cv, (s,)))(
+            out, commit_vec, out_len)
+        emitted_eos = jnp.any((ar[None, :] < accept[:, None])
+                              & (commit_vec == eos_id), axis=1)
+        out_len = out_len + accept
+        new_done = done | emitted_eos | (out_len >= Tp + max_new)
+        new_pending = jnp.where(done, pending, y_at)
+        live = (~done).astype(jnp.int32)
+        stats2 = {"blocks": stats["blocks"] + live.sum(),
+                  "committed": stats["committed"] + accept.sum(),
+                  "accepted_drafts": stats["accepted_drafts"] + ((m - 1) * live).sum(),
+                  "drafted": stats["drafted"] + (K - 1) * live.sum()}
+        return (out, out_len, new_pending, new_done, cache3, stats2)
+
+    carry = (out, out_len, pending, done, cache, stats)
+    out, out_len, _, _, _, stats = jax.lax.while_loop(lambda c: ~jnp.all(c[3]),
+                                                      body, carry)
+    return GenResult(out, out_len, stats["blocks"], stats["committed"],
+                     stats["accepted_drafts"], stats["drafted"], None)

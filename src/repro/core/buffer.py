@@ -1,0 +1,85 @@
+"""Online replay ring buffer (paper §3.3).
+
+Each logged tuple is one drafted position up to and including the first
+reject:  (h_k, h_L, action, reward, block_pos, prev_id).  We store h_L
+instead of the verifier logits — with a frozen head they carry identical
+information and d_model << vocab makes the buffer ~V/d smaller (documented
+deviation in DESIGN.md §3).
+
+Fixed-shape device arrays so logging happens *inside* the jitted generation
+loop; compaction uses a prefix-sum scatter with mode='drop' for invalid
+(counterfactual / done-sequence) rows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def init_buffer(cfg: ModelConfig, slots: int = 0, dtype=jnp.float32) -> dict:
+    S = slots or cfg.dvi.buffer_slots
+    d = cfg.d_model
+    return {
+        "h_k": jnp.zeros((S, d), dtype),
+        "h_L": jnp.zeros((S, d), dtype),
+        "action": jnp.zeros((S,), jnp.int32),
+        "reward": jnp.zeros((S,), jnp.float32),
+        "pos": jnp.zeros((S,), jnp.int32),       # i: 1-indexed block position
+        "prev": jnp.zeros((S,), jnp.int32),
+        "age": jnp.zeros((S,), jnp.int32),       # write-generation (freshness)
+        "ptr": jnp.int32(0),
+        "count": jnp.int32(0),
+        "gen": jnp.int32(0),
+    }
+
+
+def add_block(buf: dict, h_k, h_L, action, reward, pos, prev, valid) -> dict:
+    """Append rows where valid.  All inputs flat (N, ...) / (N,)."""
+    S = buf["h_k"].shape[0]
+    N = valid.shape[0]
+    vi = valid.astype(jnp.int32)
+    offs = jnp.cumsum(vi) - vi                      # 0-based rank among valid
+    total = vi.sum()
+    dest = (buf["ptr"] + offs) % S
+    dest = jnp.where(valid, dest, S)                # S -> dropped
+
+    new = dict(buf)
+    new["h_k"] = buf["h_k"].at[dest].set(h_k.astype(buf["h_k"].dtype), mode="drop")
+    new["h_L"] = buf["h_L"].at[dest].set(h_L.astype(buf["h_L"].dtype), mode="drop")
+    new["action"] = buf["action"].at[dest].set(action.astype(jnp.int32), mode="drop")
+    new["reward"] = buf["reward"].at[dest].set(reward.astype(jnp.float32), mode="drop")
+    new["pos"] = buf["pos"].at[dest].set(pos.astype(jnp.int32), mode="drop")
+    new["prev"] = buf["prev"].at[dest].set(prev.astype(jnp.int32), mode="drop")
+    new["age"] = buf["age"].at[dest].set(buf["gen"], mode="drop")
+    new["ptr"] = (buf["ptr"] + total) % S
+    new["count"] = jnp.minimum(buf["count"] + total, S)
+    new["gen"] = buf["gen"] + 1
+    return new
+
+
+def sample(buf: dict, key, batch_size: int) -> dict:
+    """Uniform sample (with replacement) of `batch_size` logged tuples.
+    Rows are masked invalid when the buffer holds fewer than batch_size."""
+    S = buf["h_k"].shape[0]
+    cnt = jnp.maximum(buf["count"], 1)
+    idx = jax.random.randint(key, (batch_size,), 0, cnt)
+    # newest-first ordering not required for uniform sampling; map rank->slot
+    slot = (buf["ptr"] - 1 - idx) % S
+    batch = {k: buf[k][slot] for k in
+             ("h_k", "h_L", "action", "reward", "pos", "prev", "age")}
+    batch["mask"] = (idx < buf["count"]).astype(jnp.float32)
+    return batch
+
+
+def fresh_batch(buf: dict, batch_size: int) -> dict:
+    """The most recently written tuples (on-policy slice, paper's 'fresh')."""
+    S = buf["h_k"].shape[0]
+    offs = jnp.arange(batch_size)
+    slot = (buf["ptr"] - 1 - offs) % S
+    batch = {k: buf[k][slot] for k in
+             ("h_k", "h_L", "action", "reward", "pos", "prev", "age")}
+    fresh = buf["age"][slot] == buf["gen"] - 1
+    batch["mask"] = (fresh & (offs < buf["count"])).astype(jnp.float32)
+    return batch

@@ -1,0 +1,48 @@
+"""LoRA-parameterized draft head (paper §3.1).
+
+    p_theta(. | h_k) = softmax((W_S + gamma_s * A_s B_s) h_k)
+
+W_S is the *frozen* base projection — we tie it to the verifier's LM head
+(so at init, with B_s = 0, the drafter is exactly "the verifier head read at
+layer k": the natural self-speculation bootstrap, and it means we never
+materialize a second (d, V) matrix).  Only (A_s, B_s) train.
+
+The draft path reuses the backbone's frozen final RMSNorm on h_k before the
+projection (the verifier head sees normed h_L; giving the drafter the same
+frozen normalization keeps the two heads in one logit space, which is what
+makes the KL warmup well-conditioned).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.model import Model
+
+
+def init_draft_params(key, cfg: ModelConfig) -> dict:
+    r = cfg.dvi.lora_rank
+    d, V = cfg.d_model, cfg.vocab_size
+    ka, _ = jax.random.split(key)
+    return {
+        "A": (jax.random.normal(ka, (d, r), jnp.float32) / jnp.sqrt(d)
+              ).astype(jnp.float32),
+        "B": jnp.zeros((r, V), jnp.float32),
+    }
+
+
+def draft_logits(model: Model, params: dict, dvi_params: dict,
+                 h_k: jax.Array) -> jax.Array:
+    """h_k (..., d) -> logits (..., V) in float32."""
+    cfg = model.cfg
+    gamma = cfg.dvi.lora_alpha / cfg.dvi.lora_rank
+    hn = rms_norm(h_k, params["final_norm"], cfg.norm_eps)
+    base = (hn @ model.head_matrix(params)).astype(jnp.float32)
+    lora = (hn.astype(jnp.float32) @ dvi_params["A"]) @ dvi_params["B"]
+    return base + gamma * lora
+
+
+def num_trainable(dvi_params) -> int:
+    return sum(p.size for p in jax.tree.leaves(dvi_params))

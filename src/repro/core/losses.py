@@ -1,0 +1,160 @@
+"""DVI composite training objective (paper §3.4).
+
+    L_fast  = lambda_pg * L_pg + lambda_kl * KL(p_theta || p_phi^tau)
+              + w_ce * L_CE - w_ent * H[p_theta]
+    L_policy = w_rl * E[-(r - b) log p_theta(a|s)] + beta(t) KL(p_theta||p_phi)
+
+* L_pg: reward-masked CE over *accepted* positions only (credit where
+  speculation succeeded).
+* L_CE: CE to the verifier's greedy token over all logged positions
+  (accepted + first reject) — on accepts this coincides with L_pg's target;
+  on the first reject it teaches the correction token.
+* KL: online distillation to the temperature-softened frozen verifier.
+* L_policy: REINFORCE with an EMA-of-rewards baseline over accepted +
+  first-reject tuples (counterfactual positions are never logged).
+
+Ablation modes (paper §4.3): 'kl' / 'pg' / 'ce' single-term variants,
+'full' = the KL->RL schedule.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import schedule as sched
+from repro.core.lora import draft_logits
+from repro.models.layers import rms_norm
+from repro.models.model import Model
+
+
+def verifier_logits(model: Model, params: dict, h_L: jax.Array) -> jax.Array:
+    """Frozen target-path logits from buffered deep hidden states."""
+    return model.logits(params, h_L).astype(jnp.float32)
+
+
+def loss_terms(model: Model, params: dict, dvi_params: dict, batch: dict):
+    """Per-term losses on a buffer minibatch.  Returns dict of scalars."""
+    cfg = model.cfg
+    tau = cfg.dvi.kd_temperature
+    mask = batch["mask"]                                   # (N,) 0/1
+    r = batch["reward"]                                    # (N,) 1 accept / 0 first-reject
+
+    logits_t = draft_logits(model, params, dvi_params, batch["h_k"])   # (N,V)
+    logits_v = verifier_logits(model, params, batch["h_L"])            # (N,V)
+
+    logp_t = jax.nn.log_softmax(logits_t, axis=-1)
+    p_t = jnp.exp(logp_t)
+    logp_v_tau = jax.nn.log_softmax(logits_v / tau, axis=-1)
+    logp_v = jax.nn.log_softmax(logits_v, axis=-1)
+
+    denom = jnp.maximum(mask.sum(), 1.0)
+    acc_denom = jnp.maximum((mask * r).sum(), 1.0)
+
+    # KL(p_theta || p_phi^tau), dense online distillation
+    kl_tau = jnp.sum(p_t * (logp_t - logp_v_tau), axis=-1)
+    kl_tau = (kl_tau * mask).sum() / denom
+    kl_1 = jnp.sum(p_t * (logp_t - logp_v), axis=-1)
+    kl_1 = (kl_1 * mask).sum() / denom
+
+    # reward-masked CE on accepted actions
+    act_logp = jnp.take_along_axis(logp_t, batch["action"][:, None], axis=-1)[:, 0]
+    l_pg = -(act_logp * r * mask).sum() / acc_denom
+
+    # CE to the verifier greedy token (accepted + first reject)
+    y_star = jnp.argmax(logits_v, axis=-1)
+    star_logp = jnp.take_along_axis(logp_t, y_star[:, None], axis=-1)[:, 0]
+    l_ce = -(star_logp * mask).sum() / denom
+
+    # entropy bonus
+    ent = (-jnp.sum(p_t * logp_t, axis=-1) * mask).sum() / denom
+
+    # acceptance rate of this batch (diagnostic + EMA baseline source)
+    acc_rate = (r * mask).sum() / denom
+    return {"kl_tau": kl_tau, "kl_1": kl_1, "l_pg": l_pg, "l_ce": l_ce,
+            "entropy": ent, "act_logp": act_logp, "acc_rate": acc_rate,
+            "mask": mask, "reward": r}
+
+
+def composite_loss(dvi_params: dict, model: Model, params: dict,
+                   batch: dict, fresh: Optional[dict], t, baseline,
+                   mode: str = "full"):
+    """Full DVI objective at optimizer step t.  Returns (loss, metrics)."""
+    cfg = model.cfg
+    dvi = cfg.dvi
+    terms = loss_terms(model, params, dvi_params, batch)
+    lam_pg, lam_kl = sched.lambda_schedule(t, dvi)
+
+    if mode == "kl":
+        loss = terms["kl_tau"]
+    elif mode == "pg":
+        # pure on-policy REINFORCE (no KD) — paper ablation 2
+        adv = (terms["reward"] - baseline) * terms["mask"]
+        loss = -(adv * terms["act_logp"]).sum() / jnp.maximum(terms["mask"].sum(), 1.0)
+    elif mode == "ce":
+        loss = terms["l_pg"]          # reward-masked CE only — paper ablation 3
+    else:
+        loss = (lam_pg * terms["l_pg"] + lam_kl * terms["kl_tau"]
+                + dvi.w_ce * terms["l_ce"] - dvi.w_ent * terms["entropy"])
+        if fresh is not None:
+            ft = loss_terms(model, params, dvi_params, fresh)
+            adv = (ft["reward"] - baseline) * ft["mask"]
+            pg_on = -(adv * ft["act_logp"]).sum() / jnp.maximum(ft["mask"].sum(), 1.0)
+            gate = sched.policy_gate(t, dvi)
+            beta = sched.beta_schedule(t, dvi)
+            loss = loss + gate * (dvi.w_rl * pg_on + beta * ft["kl_1"])
+
+    metrics = {"loss": loss, "kl": terms["kl_tau"], "l_pg": terms["l_pg"],
+               "l_ce": terms["l_ce"], "entropy": terms["entropy"],
+               "acc_rate": terms["acc_rate"], "lam_pg": lam_pg, "lam_kl": lam_kl}
+    return loss, metrics
+
+
+def dense_train_losses(model: Model, params: dict, dvi_params: dict,
+                       tokens: jax.Array, t, baseline, mode: str = "full",
+                       aux_inputs=None, remat: bool = False,
+                       max_positions: int = 8192):
+    """Teacher-forced batch variant of the DVI objective (the `train_4k`
+    workload): one full forward computes h_k and h_L at every position,
+    position-wise accept = (draft greedy == verifier greedy), and the same
+    composite loss applies with the dense accept mask as reward.
+
+    Positions are stride-subsampled to <= max_positions before the (N, V)
+    logits — mirroring the paper's minibatch-from-buffer updates and keeping
+    the loss head O(max_positions x V) regardless of batch x seq (a 1M-token
+    batch with a 128k vocab would otherwise need a 0.5 PB logits tensor).
+    Gradients flow ONLY to the LoRA adapters: the backbone forward is
+    activation-free for backward purposes (no remat stash needed)."""
+    cfg = model.cfg
+    k = cfg.dvi.split_layer
+    enc = model.encode(params, aux_inputs) if cfg.encoder is not None else None
+    x = model.embed(params, tokens, aux_inputs)
+    x = jax.lax.stop_gradient(x)
+    h_k, _, _ = model.hidden(params, x, 0, k, enc_out=enc, remat=remat,
+                             prefix_len=model._prefix_len(aux_inputs))
+    h_L, _, aux = model.hidden(params, h_k, k, None, enc_out=enc, remat=remat,
+                               prefix_len=model._prefix_len(aux_inputs))
+    B, T, d = h_k.shape
+    # position i's tuple: (h_k[i], predicts token i+1); drop the last position
+    hk = h_k[:, :-1].reshape(-1, d)
+    hL = h_L[:, :-1].reshape(-1, d)
+    N = hk.shape[0]
+    if N > max_positions:
+        stride = -(-N // max_positions)
+        hk = hk[::stride]
+        hL = hL[::stride]
+    hk = jax.lax.stop_gradient(hk)
+    hL = jax.lax.stop_gradient(hL)
+    logits_t = draft_logits(model, params, dvi_params, hk)
+    logits_v = verifier_logits(model, params, hL)
+    a = jnp.argmax(logits_t, axis=-1)
+    y = jnp.argmax(logits_v, axis=-1)
+    reward = (a == y).astype(jnp.float32)
+    batch = {"h_k": hk, "h_L": hL, "action": a, "reward": reward,
+             "mask": jnp.ones_like(reward)}
+    loss, metrics = composite_loss(dvi_params, model, params, batch, None, t,
+                                   baseline, mode)
+    return loss, metrics

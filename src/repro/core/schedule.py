@@ -1,0 +1,35 @@
+"""KL->RL annealing schedule (paper §3.4).
+
+    (lambda_pg, lambda_kl)(t) =
+        (0, lambda_0)                                   t < T_warmup
+        linear ramp to (lambda_pg_max, lambda_kl_min)   T_warmup <= t < T_warmup + T_ramp
+        (lambda_pg_max, lambda_kl_min)                  after
+
+beta(t) for the on-policy correction decays from beta0 to beta_min.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import DVIConfig
+
+
+def lambda_schedule(t, dvi: DVIConfig):
+    """t: scalar (traced ok).  Returns (lambda_pg, lambda_kl) float32."""
+    t = jnp.asarray(t, jnp.float32)
+    frac = jnp.clip((t - dvi.warmup_steps) / max(dvi.ramp_steps, 1), 0.0, 1.0)
+    lam_pg = frac * dvi.lambda_pg_max
+    lam_kl = dvi.lambda_kl0 - frac * (dvi.lambda_kl0 - dvi.lambda_kl_min)
+    return lam_pg, lam_kl
+
+
+def beta_schedule(t, dvi: DVIConfig):
+    t = jnp.asarray(t, jnp.float32)
+    decay = jnp.exp(-t / max(dvi.beta_decay_steps, 1))
+    return dvi.beta_min + (dvi.beta0 - dvi.beta_min) * decay
+
+
+def policy_gate(t, dvi: DVIConfig):
+    """On-policy correction is off during warmup, ramps in with lambda_pg."""
+    lam_pg, _ = lambda_schedule(t, dvi)
+    return lam_pg / max(dvi.lambda_pg_max, 1e-9)

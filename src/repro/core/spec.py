@@ -1,0 +1,269 @@
+"""Draft -> Verify -> commit: the self-speculative decoding engine (paper §3.2-3.3).
+
+One speculative *block* at committed length t (all shapes static, batched,
+runs inside ``jax.lax.while_loop``):
+
+1. **Draft** — K+1 shallow feeds through layers [0, k).  Feed j embeds the
+   pending token, produces ``h_k(t+j)``, and the LoRA draft head greedily
+   proposes the next token.  Shallow caches advance eagerly; stateful
+   mixers' per-feed states are stacked for later rollback-by-selection.
+2. **Verify** — ONE deep pass of layers [k, L) over the h_k block (this is
+   where self-speculation amortizes the deep compute), giving verifier
+   greedy tokens ``y*(t+1 .. t+K+1)``.
+3. **Commit** — the longest agreeing prefix m plus the verifier's
+   correction/bonus token: m+1 tokens ∈ [1, K+1] per block.  The committed
+   stream is *exactly* the target path's greedy decoding (tested as a
+   property).  Accept/reject outcomes for drafted positions 1..K are logged
+   to the replay buffer (r=1 accepted, r=0 first reject, counterfactuals
+   excluded).
+
+``k_spec=0`` degenerates to plain autoregressive decoding of the target
+path through the same code path (the AR baseline).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import buffer as buffer_mod
+from repro.core.lora import draft_logits
+from repro.models import transformer as tfm
+from repro.models.model import Model
+
+
+class GenResult(NamedTuple):
+    tokens: jax.Array          # (B, total) committed stream (prompt + gen)
+    lengths: jax.Array         # (B,) valid token count
+    blocks: jax.Array          # scalar: total verification steps
+    committed: jax.Array       # scalar: total committed tokens (gen only)
+    accepted_drafts: jax.Array # scalar: total accepted drafted tokens
+    drafted: jax.Array         # scalar: total drafted tokens (valid blocks * K)
+    buffer: Optional[dict]
+
+
+def _restack_cands(cand_stack):
+    """scan-stacked shallow candidates (K+1, n, B, 1, ...) -> (n, B, K+1, ...)."""
+    return jax.tree.map(lambda a: jnp.moveaxis(a.squeeze(3), 0, 2), cand_stack)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: temperature sampling with lossless rejection verification
+# (Leviathan'23 speculative *sampling*; the paper evaluates greedy only)
+# ---------------------------------------------------------------------------
+
+def rejection_commit(key, d_blk, dprobs, vprobs):
+    """Speculative-sampling accept/reject (exact target distribution).
+
+    d_blk (B, K+1) drafted tokens (position K is the bonus feed, unused for
+    acceptance); dprobs/vprobs (B, K+1, V) drafter/verifier distributions.
+    Accept drafted token i while u_i < p(d_i)/q(d_i); at the first reject
+    emit a sample from norm(max(p - q, 0)); if all K accepted emit a bonus
+    sample from p at position K.  Returns (m, correction (B,))."""
+    B, K1, V = dprobs.shape
+    K = K1 - 1
+    ku, kr = jax.random.split(key)
+    u = jax.random.uniform(ku, (B, K))
+    p_at = jnp.take_along_axis(vprobs[:, :K], d_blk[:, :K, None], -1)[..., 0]
+    q_at = jnp.take_along_axis(dprobs[:, :K], d_blk[:, :K, None], -1)[..., 0]
+    ratio = p_at / jnp.maximum(q_at, 1e-20)
+    ok = (u < ratio).astype(jnp.int32)
+    m = jnp.sum(jnp.cumprod(ok, axis=1), axis=1)                  # (B,)
+
+    # correction distribution at position m: residual (reject) or p (bonus)
+    pm = jnp.take_along_axis(vprobs, m[:, None, None], axis=1)[:, 0]   # (B,V)
+    qm = jnp.take_along_axis(dprobs, m[:, None, None], axis=1)[:, 0]
+    resid = jnp.maximum(pm - qm, 0.0)
+    rsum = resid.sum(-1, keepdims=True)
+    resid = jnp.where(rsum > 1e-20, resid / jnp.maximum(rsum, 1e-20), pm)
+    dist = jnp.where((m == K)[:, None], pm, resid)
+    correction = jax.random.categorical(kr, jnp.log(jnp.maximum(dist, 1e-30)))
+    return m, correction.astype(jnp.int32)
+
+
+def speculative_generate(model: Model, params: dict, dvi_params: dict,
+                         prompts: jax.Array, max_new: int,
+                         k_spec: Optional[int] = None,
+                         cache_len: Optional[int] = None,
+                         eos_id: int = 1,
+                         collect: bool = False,
+                         buf: Optional[dict] = None,
+                         aux_inputs: Optional[dict] = None,
+                         temperature: float = 0.0,
+                         key: Optional[jax.Array] = None) -> GenResult:
+    """Batched lossless speculative generation with optional tuple logging.
+
+    prompts: (B, Tp) with Tp >= 2, all sequences the same length (serving
+    buckets/pads upstream — required for exact stateful-mixer prefill).
+
+    temperature == 0 (paper setting): greedy drafting + longest-prefix
+    verification.  temperature > 0 (beyond-paper): the drafter *samples*
+    and the verifier runs Leviathan-style rejection sampling — the emitted
+    stream is distributed exactly as target-model sampling."""
+    cfg = model.cfg
+    K = cfg.dvi.k_spec if k_spec is None else k_spec
+    k = cfg.dvi.split_layer
+    L = cfg.num_layers
+    B, Tp = prompts.shape
+    sampling = temperature > 0.0
+    key = key if key is not None else jax.random.PRNGKey(0)
+    assert Tp >= 2, "need at least 2 prompt tokens (one prefill + one pending)"
+    total = Tp + max_new + K + 2
+    cache_cap = cache_len or (total + tfm.RING_SLACK)
+
+    # ---- prefill all but the last prompt token; it becomes `pending` ----
+    _, cache, _ = model.prefill(params, prompts[:, :Tp - 1], aux_inputs,
+                                max_len=cache_cap)
+    pending = prompts[:, Tp - 1]
+    out = jnp.zeros((B, total), jnp.int32).at[:, :Tp].set(prompts)
+    out_len = jnp.full((B,), Tp, jnp.int32)
+    done = jnp.zeros((B,), bool)
+    if collect and buf is None:
+        buf = buffer_mod.init_buffer(cfg)
+    stats = {k_: jnp.int32(0) for k_ in
+             ("blocks", "committed", "accepted_drafts", "drafted")}
+
+    def draft_iter(carry, _):
+        cache_c, pend, k_ = carry
+        x = model.embed_block(params, pend[:, None], cache_c["lengths"])
+        h_k, cache2, cands, _ = model.step(params, x, cache_c, 0, k)
+        dlog = draft_logits(model, params, dvi_params, h_k[:, 0])
+        if sampling:
+            k_, sub = jax.random.split(k_)
+            dprobs = jax.nn.softmax(dlog / temperature, axis=-1)
+            d_tok = jax.random.categorical(sub, dlog / temperature).astype(jnp.int32)
+        else:
+            dprobs = jnp.zeros((B, 1), jnp.float32)     # unused placeholder
+            d_tok = jnp.argmax(dlog, axis=-1).astype(jnp.int32)
+        cache3 = tfm.commit_cache(cfg, cache2, cands,
+                                  jnp.ones((B,), jnp.int32))
+        return (cache3, d_tok, k_), (h_k[:, 0], d_tok, dprobs, cands)
+
+    def body(carry):
+        out, out_len, pending, done, cache, buf, stats, key = carry
+        t0 = cache["lengths"]
+
+        (cache_d, _, key), (hk_s, d_s, dp_s, cand_stack) = jax.lax.scan(
+            draft_iter, (cache, pending, key), None, length=K + 1)
+        hk_blk = jnp.moveaxis(hk_s, 0, 1)               # (B, K+1, d)
+        d_blk = jnp.moveaxis(d_s, 0, 1)                 # (B, K+1)
+
+        # ---- verify: one deep pass over the h_k block ----
+        cache_v = dict(cache_d, lengths=t0)
+        h_L_blk, cache_v2, deep_cands, _ = model.step(params, hk_blk, cache_v, k, L)
+        vlogits = model.logits(params, h_L_blk)
+        y_star = jnp.argmax(vlogits, axis=-1).astype(jnp.int32)   # (B, K+1)
+
+        if sampling:
+            key, sub = jax.random.split(key)
+            vprobs = jax.nn.softmax(vlogits / temperature, axis=-1)
+            dprobs = jnp.moveaxis(dp_s, 0, 1)           # (B, K+1, V)
+            m, correction = rejection_commit(sub, d_blk, dprobs, vprobs)
+        else:
+            matches = (d_blk[:, :K] == y_star[:, :K])
+            m = jnp.sum(jnp.cumprod(matches.astype(jnp.int32), axis=1), axis=1)
+            correction = None
+        accept = jnp.where(done, 0, m + 1)              # (B,)
+
+        all_cands = dict(_restack_cands(cand_stack), **deep_cands)
+        cache_new = tfm.commit_cache(cfg, cache_v2, all_cands, accept)
+
+        # ---- commit tokens ----
+        ar = jnp.arange(K + 1)
+        y_at_m = correction if sampling else \
+            jnp.take_along_axis(y_star, m[:, None], axis=1)[:, 0]
+        commit_vec = jnp.where(ar[None, :] < m[:, None], d_blk, y_at_m[:, None])
+        out = jax.vmap(lambda o, cv, s: jax.lax.dynamic_update_slice(o, cv, (s,)))(
+            out, commit_vec, out_len)
+        emitted_eos = jnp.any((ar[None, :] < accept[:, None])
+                              & (commit_vec == eos_id), axis=1)
+        out_len = out_len + accept
+        new_done = done | emitted_eos | (out_len >= Tp + max_new)
+        new_pending = jnp.where(done, pending, y_at_m)
+
+        # ---- log tuples (drafted positions 1..K up to first reject) ----
+        if collect:
+            i_idx = jnp.arange(1, K + 1)                        # (K,)
+            valid = (~done)[:, None] & (i_idx[None, :]
+                                        <= jnp.minimum(m + 1, K)[:, None])
+            reward = (i_idx[None, :] <= m[:, None]).astype(jnp.float32)
+            prev = jnp.concatenate([pending[:, None], d_blk[:, :K - 1]], axis=1) \
+                if K > 1 else pending[:, None]
+            d = cfg.d_model
+            buf = buffer_mod.add_block(
+                buf,
+                hk_blk[:, :K].reshape(B * K, d),
+                h_L_blk[:, :K].reshape(B * K, d),
+                d_blk[:, :K].reshape(B * K),
+                reward.reshape(B * K),
+                jnp.broadcast_to(i_idx[None], (B, K)).reshape(B * K),
+                prev.reshape(B * K),
+                valid.reshape(B * K))
+
+        live = (~done).astype(jnp.int32)
+        stats2 = {
+            "blocks": stats["blocks"] + live.sum(),
+            "committed": stats["committed"] + accept.sum(),
+            "accepted_drafts": stats["accepted_drafts"] + (m * live).sum(),
+            "drafted": stats["drafted"] + K * live.sum(),
+        }
+        return (out, out_len, new_pending, new_done, cache_new, buf, stats2,
+                key)
+
+    def cond(carry):
+        done = carry[3]
+        return ~jnp.all(done)
+
+    carry = (out, out_len, pending, done, cache, buf, stats, key)
+    out, out_len, pending, done, cache, buf, stats, key = jax.lax.while_loop(
+        cond, body, carry)
+    return GenResult(out, out_len, stats["blocks"], stats["committed"],
+                     stats["accepted_drafts"], stats["drafted"], buf)
+
+
+def ar_generate(model: Model, params: dict, prompts, max_new, **kw):
+    """Plain greedy autoregressive decoding of the target path (K = 0)."""
+    dvi_dummy = {"A": jnp.zeros((model.cfg.d_model, 1), jnp.float32),
+                 "B": jnp.zeros((1, model.cfg.vocab_size), jnp.float32)}
+    return speculative_generate(model, params, dvi_dummy, prompts, max_new,
+                                k_spec=0, collect=False, **kw)
+
+
+def serve_step(model: Model, params: dict, dvi_params: dict, pending,
+               cache, k_spec: Optional[int] = None):
+    """ONE speculative step against an existing cache — the unit the decode
+    dry-run shapes lower (decode_32k / long_500k): draft K, verify once,
+    commit m+1.  Returns (new_pending, commit_vec, accept, new_cache)."""
+    cfg = model.cfg
+    K = cfg.dvi.k_spec if k_spec is None else k_spec
+    k, L = cfg.dvi.split_layer, cfg.num_layers
+    B = pending.shape[0]
+    t0 = cache["lengths"]
+
+    def draft_iter(carry, _):
+        cache_c, pend = carry
+        x = model.embed_block(params, pend[:, None], cache_c["lengths"])
+        h_k, cache2, cands, _ = model.step(params, x, cache_c, 0, k)
+        dlog = draft_logits(model, params, dvi_params, h_k[:, 0])
+        d_tok = jnp.argmax(dlog, axis=-1).astype(jnp.int32)
+        cache3 = tfm.commit_cache(cfg, cache2, cands, jnp.ones((B,), jnp.int32))
+        return (cache3, d_tok), (h_k[:, 0], d_tok, cands)
+
+    (cache_d, _), (hk_s, d_s, cand_stack) = jax.lax.scan(
+        draft_iter, (cache, pending), None, length=K + 1)
+    hk_blk = jnp.moveaxis(hk_s, 0, 1)
+    d_blk = jnp.moveaxis(d_s, 0, 1)
+    cache_v = dict(cache_d, lengths=t0)
+    h_L_blk, cache_v2, deep_cands, _ = model.step(params, hk_blk, cache_v, k, L)
+    y_star = jnp.argmax(model.logits(params, h_L_blk), axis=-1).astype(jnp.int32)
+    matches = (d_blk[:, :K] == y_star[:, :K])
+    m = jnp.sum(jnp.cumprod(matches.astype(jnp.int32), axis=1), axis=1)
+    accept = m + 1
+    all_cands = dict(_restack_cands(cand_stack), **deep_cands)
+    cache_new = tfm.commit_cache(cfg, cache_v2, all_cands, accept)
+    ar = jnp.arange(K + 1)
+    y_at_m = jnp.take_along_axis(y_star, m[:, None], axis=1)[:, 0]
+    commit_vec = jnp.where(ar[None, :] < m[:, None], d_blk, y_at_m[:, None])
+    return y_at_m, commit_vec, accept, cache_new

@@ -1,0 +1,5 @@
+from repro.data.synthetic import SyntheticTasks, TASK_CATEGORIES
+from repro.data.sharegpt import load_sharegpt_prompts, ByteTokenizer
+
+__all__ = ["SyntheticTasks", "TASK_CATEGORIES", "load_sharegpt_prompts",
+           "ByteTokenizer"]

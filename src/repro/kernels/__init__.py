@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for DVI's compute hot-spots.
+
+Each kernel ships three artifacts: <name>.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd wrapper, interpret-mode on CPU), ref.py (pure-jnp oracle).
+"""

@@ -1,0 +1,97 @@
+"""Flash-decode GQA attention over the KV cache (single query token).
+
+TPU adaptation of flash-decoding: the KV sequence is blocked; each grid
+step stages one (bs, hd) K/V tile HBM->VMEM, updates an online-softmax
+accumulator (m, l, acc) held in VMEM scratch for the whole q-head *group*
+sharing that KV head (GQA: G = H / KV query heads per KV head), and the
+normalized output is written once on the last block.  Length masking uses
+the per-sequence cache length (slots >= length are dead speculative writes).
+
+Grid: (B, KV, S/bs) — batch and kv-head parallel, seq innermost sequential.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, bs: int, scale: float):
+    s = pl.program_id(2)
+    nsb = pl.num_programs(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                # (G, hd)
+    k = k_ref[0, :, 0, :]                          # (bs, hd)
+    v = v_ref[0, :, 0, :]
+    length = len_ref[0]
+
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, bs)
+    slot = s * bs + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(slot < length, scores, NEG)
+
+    m_prev = m_ref[...]                            # (G,)
+    m_cur = jnp.maximum(m_prev, scores.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(scores - m_cur[:, None])           # (G, bs)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jnp.dot(p, v.astype(jnp.float32),
+                              preferred_element_type=jnp.float32))
+    m_ref[...] = m_cur
+
+    @pl.when(s == nsb - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, block_s: int = 512,
+                     interpret: bool = False):
+    """q (B, H, hd); k/v (B, S, KV, hd); lengths (B,) -> out (B, H, hd)."""
+    B, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bs = min(block_s, S)
+    Sp = -(-S // bs) * bs
+    if Sp != S:
+        pad = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    qg = q.reshape(B, KV, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bs=bs, scale=scale),
+        grid=(B, KV, Sp // bs),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, s: (b,)),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, h, s: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, qg, k, v)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,54 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode — the kernel
+body executes in Python for bit-faithful validation against the ref.py
+oracles; on a real TPU backend the same calls compile to Mosaic.  Set
+``REPRO_FORCE_INTERPRET=0`` to force compiled mode.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.lora_logits import lora_logits as _lora_logits
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+from repro.kernels.verify_argmax import verify_argmax as _verify_argmax
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_FORCE_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false")
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_t", "block_v"))
+def verify_argmax(h, w, block_t: int = 128, block_v: int = 2048):
+    return _verify_argmax(h, w, block_t=block_t, block_v=block_v,
+                          interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("gamma", "block_t", "block_v"))
+def lora_logits(h, w, a, b, gamma: float, block_t: int = 128,
+                block_v: int = 2048):
+    return _lora_logits(h, w, a, b, gamma, block_t=block_t, block_v=block_v,
+                        interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("block_s",))
+def decode_attention(q, k, v, lengths, block_s: int = 512):
+    return _decode_attention(q, k, v, lengths, block_s=block_s,
+                             interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(xh, Bc, Cc, dt, A, chunk: int = 128):
+    return _ssd_scan(xh, Bc, Cc, dt, A, chunk, interpret=_interpret())
+
+
+__all__ = ["verify_argmax", "lora_logits", "decode_attention", "ssd_scan", "ref"]

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked  # canonical SSD oracle (re-export)
+
+
+def ref_verify_argmax(h: jax.Array, w: jax.Array):
+    """h (T, d), w (d, V) -> (argmax (T,) int32, maxval (T,) f32).
+
+    The verifier's greedy emission y* = argmax_v (h @ w) — the paper's
+    verification rule — computed naively (materializes the full logits)."""
+    logits = jnp.dot(h, w, preferred_element_type=jnp.float32)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits.max(axis=-1)
+
+
+def ref_lora_logits(h: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
+                    gamma: float):
+    """Draft head logits (W_S + gamma A B) h, materialized.  f32 out."""
+    base = jnp.dot(h, w, preferred_element_type=jnp.float32)
+    lora = jnp.dot(jnp.dot(h, a, preferred_element_type=jnp.float32), b,
+                   preferred_element_type=jnp.float32)
+    return base + gamma * lora
+
+
+def ref_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                         lengths: jax.Array, scale: float | None = None):
+    """q (B, H, hd); k/v (B, S, KV, hd); lengths (B,): attend slots < len.
+    Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(jnp.float32(hd))
+    qg = q.reshape(B, KV, G, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k).astype(jnp.float32) * scale
+    mask = jnp.arange(S)[None, :] < lengths[:, None]          # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v)
+    return out.reshape(B, H, hd)
+
+
+def ref_ssd_scan(xh, Bc, Cc, dt, A, chunk: int, h0=None):
+    """Alias of the model-level chunked SSD (see repro.models.ssm)."""
+    return ssd_chunked(xh, Bc, Cc, dt, A, chunk, h0=h0)

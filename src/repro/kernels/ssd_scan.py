@@ -1,0 +1,101 @@
+"""Mamba-2 SSD chunked scan kernel (state-space duality, arXiv:2405.21060).
+
+TPU formulation: grid (B, T/Q) with the chunk axis sequential; the running
+SSD state (H, hd, ds) lives in VMEM scratch across chunk steps.  Each chunk
+does the intra-chunk quadratic term (two MXU einsums through a (Q, Q, H)
+decay-masked attention-like tensor), the inter-chunk contribution from the
+carried state, and the state update — i.e. the same decomposition as the
+pure-jnp oracle ``repro.kernels.ref.ref_ssd_scan``, with chunk length Q=128
+matched to MXU tiling.
+
+G (B/C groups) == 1 here (Mamba-2 default); dt is pre-softplus-ed by the
+wrapper caller.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, y_ref, hout_ref, hstate_ref,
+            *, Q: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        hstate_ref[...] = jnp.zeros_like(hstate_ref)
+
+    x = x_ref[0].astype(jnp.float32)               # (Q, H, hd)
+    Bc = b_ref[0].astype(jnp.float32)              # (Q, ds)   (G == 1)
+    Cc = c_ref[0].astype(jnp.float32)              # (Q, ds)
+    dt = dt_ref[0].astype(jnp.float32)             # (Q, H)
+    A = a_ref[...]                                 # (H,)
+
+    dA = dt * A[None, :]                           # (Q, H)
+    cum = jnp.cumsum(dA, axis=0)                   # inclusive
+    seg = cum[:, None, :] - cum[None, :, :]        # (Q, Q, H)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    tri = (jj <= ii)[:, :, None]
+    decay = jnp.where(tri, jnp.exp(seg), 0.0)      # (Q, Q, H)
+    cb = jnp.dot(Cc, Bc.T, preferred_element_type=jnp.float32)  # (Q, Q)
+    att = cb[:, :, None] * decay * dt[None, :, :]  # (Q, Q, H)
+    y_intra = jnp.einsum("ijh,jhd->ihd", att, x)
+
+    # inter-chunk from carried state
+    h_in = hstate_ref[...]                         # (H, hd, ds)
+    y_inter = jnp.einsum("is,hds,ih->ihd", Cc, h_in, jnp.exp(cum))
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h_out = exp(sum dA) h_in + sum_j exp(cum_last-cum_j) dt_j B_j x_j
+    dec_out = jnp.exp(cum[-1:, :] - cum) * dt      # (Q, H)
+    chunk_state = jnp.einsum("jh,js,jhd->hds", dec_out, Bc, x)
+    hstate_ref[...] = h_in * jnp.exp(cum[-1])[:, None, None] + chunk_state
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        hout_ref[0] = hstate_ref[...]
+
+
+def ssd_scan(xh: jax.Array, Bc: jax.Array, Cc: jax.Array, dt: jax.Array,
+             A: jax.Array, chunk: int = 128, *, interpret: bool = False):
+    """xh (B,T,H,hd); Bc/Cc (B,T,1,ds); dt (B,T,H) post-softplus; A (H,) < 0.
+    T % chunk == 0.  Returns (y (B,T,H,hd), final_state (B,H,hd,ds))."""
+    B, T, H, hd = xh.shape
+    ds = Bc.shape[-1]
+    assert Bc.shape[2] == 1, "kernel supports G=1 (Mamba-2 default)"
+    assert T % chunk == 0
+    Q = chunk
+    nc = T // Q
+    Bc2 = Bc[:, :, 0, :]
+    Cc2 = Cc[:, :, 0, :]
+
+    y, h_final = pl.pallas_call(
+        functools.partial(_kernel, Q=Q),
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, H, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, Q, ds), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, ds), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, H), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((H,), lambda b, c: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, H, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, H, hd, ds), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H, hd), xh.dtype),
+            jax.ShapeDtypeStruct((B, H, hd, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H, hd, ds), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(xh, Bc2, Cc2, dt, A)
+    return y, h_final

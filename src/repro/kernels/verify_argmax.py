@@ -1,0 +1,79 @@
+"""Fused verifier head: vocab-tiled matmul + running argmax.
+
+The verifier's greedy rule y* = argmax_v softmax(W h_L) never needs the
+softmax or the full logits row — only the argmax.  On TPU we tile the vocab
+dimension, compute each (T_blk x V_blk) logits block on the MXU in VMEM,
+and fold it into a running (max, argmax) pair held in the (revisited)
+output blocks.  The (T, V) logits tensor never touches HBM: for a 128k
+vocab this deletes a T x 128256 x 4B round-trip per verification step and
+turns the verify head from memory-bound to compute-bound (see DESIGN.md §3).
+
+Grid: (T/bt, V/bv), vocab innermost ('arbitrary' — sequential accumulate).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(h_ref, w_ref, arg_ref, max_ref, *, bv: int, v_real: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        max_ref[...] = jnp.full_like(max_ref, NEG)
+        arg_ref[...] = jnp.zeros_like(arg_ref)
+
+    logits = jnp.dot(h_ref[...], w_ref[...],
+                     preferred_element_type=jnp.float32)      # (bt, bv)
+    cols = j * bv + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    logits = jnp.where(cols < v_real, logits, NEG)            # mask vocab pad
+    lmax = jnp.max(logits, axis=-1)
+    larg = jnp.argmax(logits, axis=-1).astype(jnp.int32) + j * bv
+    run_max = max_ref[...]
+    upd = lmax > run_max
+    arg_ref[...] = jnp.where(upd, larg, arg_ref[...])
+    max_ref[...] = jnp.where(upd, lmax, run_max)
+
+
+def verify_argmax(h: jax.Array, w: jax.Array, *, block_t: int = 128,
+                  block_v: int = 2048, interpret: bool = False):
+    """h (T, d), w (d, V) -> (argmax (T,) int32, maxval (T,) f32)."""
+    T, d = h.shape
+    V = w.shape[1]
+    bt = min(block_t, max(8, T))
+    bv = min(block_v, V)
+    Tp = -(-T // bt) * bt
+    Vp = -(-V // bv) * bv
+    if Tp != T:
+        h = jnp.pad(h, ((0, Tp - T), (0, 0)))
+    if Vp != V:
+        w = jnp.pad(w, ((0, 0), (0, Vp - V)))
+
+    grid = (Tp // bt, Vp // bv)
+    arg, mx = pl.pallas_call(
+        functools.partial(_kernel, bv=bv, v_real=V),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bv), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt,), lambda i, j: (i,)),
+            pl.BlockSpec((bt,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Tp,), jnp.int32),
+            jax.ShapeDtypeStruct((Tp,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(h, w)
+    return arg[:T], mx[:T]

@@ -1,0 +1,48 @@
+"""Multi-host / multi-pod runtime initialization (production boilerplate).
+
+On real TPU pods each host runs the same program; ``init_runtime()`` wires
+jax.distributed from the standard environment (GKE/TPU-VM style) and
+returns the global mesh.  On CPU (this container) it no-ops and the caller
+falls back to the 512-fake-device dry-run path.
+
+Typical pod launch (one line per host, or via GKE jobset):
+
+    COORDINATOR_ADDRESS=$LEADER:8476 NUM_PROCESSES=$N PROCESS_ID=$i \\
+        python -m repro.launch.train --arch llama3-405b --mode dvi-batch ...
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.launch.mesh import make_production_mesh
+
+
+def init_runtime(require_tpu: bool = False):
+    """Initialize jax.distributed if a coordinator is configured."""
+    coord = os.environ.get("COORDINATOR_ADDRESS")
+    nproc = os.environ.get("NUM_PROCESSES")
+    pid = os.environ.get("PROCESS_ID")
+    if coord and nproc and pid is not None:
+        jax.distributed.initialize(coordinator_address=coord,
+                                   num_processes=int(nproc),
+                                   process_id=int(pid))
+    if require_tpu and jax.default_backend() != "tpu":
+        raise RuntimeError(
+            f"TPU required, got backend={jax.default_backend()!r}; "
+            "use the dry-run path on CPU")
+    return jax.devices()
+
+
+def production_mesh_or_dryrun():
+    """Real mesh on a pod; on CPU, instruct the caller to use dryrun.py."""
+    n = len(jax.devices())
+    if n >= 512:
+        return make_production_mesh(multi_pod=True)
+    if n >= 256:
+        return make_production_mesh(multi_pod=False)
+    raise RuntimeError(
+        f"{n} devices < 256: not a production slice. For configuration "
+        "validation run `python -m repro.launch.dryrun` (forces 512 host "
+        "devices before jax init).")

@@ -1,0 +1,78 @@
+"""Sweep driver: run every (arch x shape x mesh) dry-run as a subprocess
+(one process per case — 512 fake devices + big HLO compiles stay isolated).
+
+  PYTHONPATH=src python -m repro.launch.dryrun_all [--out experiments/dryrun]
+      [--mesh single|multi|both] [--archs a,b,c] [--shapes s1,s2]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES
+
+TIMEOUT_S = 3000
+
+
+def run_one(arch: str, shape: str, multipod: bool, out: str) -> dict:
+    tag = f"{arch}_{shape}_{'2x16x16' if multipod else '16x16'}"
+    path = os.path.join(out, tag + ".json")
+    if os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") in ("ok", "skip"):
+            print(f"[sweep] {tag}: cached ({rec['status']})")
+            return rec
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out]
+    if multipod:
+        cmd.append("--multipod")
+    t0 = time.time()
+    try:
+        r = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=TIMEOUT_S)
+        ok = r.returncode == 0
+        tail = (r.stdout + r.stderr).strip().splitlines()[-1:] or [""]
+        print(f"[sweep] {tag}: {'ok' if ok else 'FAIL'} "
+              f"({time.time()-t0:.0f}s) {tail[0][:150]}")
+    except subprocess.TimeoutExpired:
+        print(f"[sweep] {tag}: TIMEOUT after {TIMEOUT_S}s")
+        with open(path, "w") as f:
+            json.dump({"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if multipod else "16x16",
+                       "status": "fail", "error": "compile timeout"}, f)
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {"status": "fail", "arch": arch, "shape": shape}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--archs", default=",".join(ASSIGNED_ARCHS))
+    ap.add_argument("--shapes", default=",".join(INPUT_SHAPES))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    archs = args.archs.split(",")
+    shapes = args.shapes.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    results = []
+    for shape in shapes:
+        for arch in archs:
+            for mp in meshes:
+                results.append(run_one(arch, shape, mp, args.out))
+    n_ok = sum(r.get("status") == "ok" for r in results)
+    n_skip = sum(r.get("status") == "skip" for r in results)
+    n_fail = len(results) - n_ok - n_skip
+    print(f"[sweep] done: {n_ok} ok, {n_skip} skip, {n_fail} fail "
+          f"of {len(results)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Opportunistic sharding hints.
+
+``hint(x, *axes)`` applies ``with_sharding_constraint`` when a hint mesh is
+active and the named axes divide the corresponding dims; it is a no-op on
+CPU tests / single-device runs.  Model code can therefore express "this dim
+wants to live on that axis" without hard-coupling to a mesh.
+
+The mesh is registered explicitly (``set_hint_mesh`` / ``hint_mesh``
+context manager) by the launcher before tracing — JAX's `with mesh:`
+context does not expose the mesh to traced code in the Auto-sharding mode
+this framework uses.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = None
+
+
+def set_hint_mesh(mesh):
+    global _MESH
+    _MESH = mesh
+
+
+@contextlib.contextmanager
+def hint_mesh(mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        _MESH = prev
+
+
+def hint(x, *axes):
+    """axes: one entry per dim — an axis name, a tuple of axis names (joint
+    sharding), or None.  Silently drops axes that are absent from the mesh,
+    already used, or do not divide the dim."""
+    mesh = _MESH
+    if mesh is None:
+        return x
+    spec = []
+    used = set()
+
+    def usable(ax_tuple, dim):
+        size = 1
+        for a in ax_tuple:
+            if a not in mesh.axis_names or a in used or mesh.shape[a] <= 1:
+                return False
+            size *= mesh.shape[a]
+        return dim % size == 0
+
+    for dim, ax in zip(x.shape, axes):
+        if ax is None:
+            spec.append(None)
+            continue
+        ax_t = ax if isinstance(ax, tuple) else (ax,)
+        if usable(ax_t, dim):
+            spec.append(ax if isinstance(ax, tuple) else ax)
+            used.update(ax_t)
+        elif not isinstance(ax, tuple) and usable((ax,), dim):
+            spec.append(ax)
+            used.add(ax)
+        else:
+            # tuple fallback: try the first axis alone
+            if isinstance(ax, tuple) and usable((ax[0],), dim):
+                spec.append(ax[0])
+                used.add(ax[0])
+            else:
+                spec.append(None)
+    if not any(a is not None for a in spec):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

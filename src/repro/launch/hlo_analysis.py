@@ -1,0 +1,219 @@
+"""Structural HLO analysis with while-loop trip-count accounting.
+
+``compiled.cost_analysis()`` (and naive text grepping) counts each while-loop
+body ONCE — but our stacks scan over layers and flash-attention chunks, so
+real per-device FLOPs/collective-bytes are body-cost x trip-count.  This
+module parses the post-SPMD HLO text into computations, extracts while-loop
+trip counts (canonical `compare(iv, constant(N)), direction=LT` conditions),
+and propagates multipliers through the call graph to give:
+
+* matmul FLOPs per device (from `dot` ops: 2 * |out| * contracted size)
+* collective payload / estimated wire bytes per device, per kind
+
+This is the §Perf profiling tool: it reads the same artifact a TPU run
+would compile.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8,
+                "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.+\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_DOT_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shapes(s: str):
+    return [(dt, [int(x) for x in dims.split(",")] if dims else [])
+            for dt, dims in _SHAPE_RE.findall(s)]
+
+
+def _bytes_of(s: str) -> int:
+    total = 0
+    for dt, dims in _shapes(s):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    out_type: str
+    kind: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    defs: Dict[str, str] = field(default_factory=dict)   # op name -> out type
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and ("{" in line):
+            cur = Computation(mc.group(1))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            op = Op(mo.group(1), mo.group(2), mo.group(3), line.rstrip())
+            cur.ops.append(op)
+            cur.defs[op.name] = op.out_type
+        if line.strip() == "}":
+            cur = None
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Trip count from the loop condition: the constant bound feeding the
+    ROOT comparison (possibly wrapped in a fusion) — canonical lax.scan
+    lowering compares the induction variable (from 0) against N via LT."""
+    consts = {}
+    root = None
+    for op in cond.ops:
+        m = _CONST_RE.search(op.line)
+        if m:
+            consts[op.name] = int(m.group(1))
+        if "ROOT" in op.line:
+            root = op
+    if root is not None:
+        for name, val in consts.items():
+            if f"%{name}" in root.line:
+                return max(val, 1)
+    return max(consts.values(), default=1)
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_shapes = _shapes(op.out_type)
+    out_elems = 1
+    for _, dims in out_shapes:
+        for d in dims:
+            out_elems *= d
+    # contracted size from the lhs operand's shape
+    m = re.search(r"\(\s*%?([\w\.\-]+)", op.line[op.line.index(op.kind):])
+    contract = 1
+    md = _DOT_DIMS_RE.search(op.line)
+    if m and md and md.group(1):
+        lhs_type = comp.defs.get(m.group(1))
+        if lhs_type:
+            lshapes = _shapes(lhs_type)
+            if lshapes:
+                ldims = lshapes[0][1]
+                for idx in md.group(1).split(","):
+                    i = int(idx)
+                    if i < len(ldims):
+                        contract *= ldims[i]
+    return 2.0 * out_elems * contract
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return max(int(m.group(2)), 2)
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return max(len(m.group(1).split(",")), 2)
+    return 2
+
+
+def _wire_bytes(kind: str, out_bytes: float, gsize: int) -> float:
+    frac = (gsize - 1) / gsize
+    if kind == "all-reduce":
+        return 2 * out_bytes * frac
+    if kind == "all-gather":
+        return out_bytes * frac
+    if kind == "reduce-scatter":
+        return out_bytes * (gsize - 1)
+    if kind == "all-to-all":
+        return out_bytes * frac
+    return out_bytes      # collective-permute
+
+
+def analyze(hlo: str, entry: Optional[str] = None) -> dict:
+    """Trip-count-weighted per-device FLOPs + collective schedule."""
+    comps = parse_computations(hlo)
+    entry_name = entry
+    if entry_name is None:
+        m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
+        entry_name = m.group(1) if m else next(iter(comps))
+
+    memo: Dict[str, dict] = {}
+
+    def walk(name: str, depth=0) -> dict:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        agg = {"dot_flops": 0.0, "collectives": {}}
+        if comp is None or depth > 32:
+            return agg
+        memo[name] = agg   # provisional (cycles)
+        for op in comp.ops:
+            if op.kind == "dot":
+                agg["dot_flops"] += _dot_flops(op, comp)
+            else:
+                kind = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+                if kind in COLLECTIVES:
+                    out_b = _bytes_of(op.out_type)
+                    g = _group_size(op.line)
+                    d = agg["collectives"].setdefault(
+                        kind, {"count": 0.0, "payload_bytes": 0.0,
+                               "wire_bytes": 0.0})
+                    d["count"] += 1
+                    d["payload_bytes"] += out_b
+                    d["wire_bytes"] += _wire_bytes(kind, out_b, g)
+            if op.kind == "while":
+                mw = _WHILE_RE.search(op.line)
+                if mw:
+                    trips = _trip_count(comps.get(mw.group(1), Computation("")))
+                    sub = walk(mw.group(2), depth + 1)
+                    _merge(agg, sub, trips)
+            elif op.kind in ("fusion", "call", "reduce", "map", "sort",
+                             "scatter", "conditional", "custom-call"):
+                mc = _CALL_RE.search(op.line)
+                if mc and mc.group(1) in comps and op.kind in ("fusion", "call"):
+                    sub = walk(mc.group(1), depth + 1)
+                    _merge(agg, sub, 1)
+        memo[name] = agg
+        return agg
+
+    def _merge(agg, sub, mult):
+        agg["dot_flops"] += sub["dot_flops"] * mult
+        for kind, d in sub["collectives"].items():
+            t = agg["collectives"].setdefault(
+                kind, {"count": 0.0, "payload_bytes": 0.0, "wire_bytes": 0.0})
+            for k in t:
+                t[k] += d[k] * mult
+
+    agg = walk(entry_name)
+    total = {"count": sum(d["count"] for d in agg["collectives"].values()),
+             "payload_bytes": sum(d["payload_bytes"]
+                                  for d in agg["collectives"].values()),
+             "wire_bytes": sum(d["wire_bytes"]
+                               for d in agg["collectives"].values())}
+    return {"dot_flops_per_device": agg["dot_flops"],
+            "collectives_per_kind": agg["collectives"],
+            "collectives_total": total}

@@ -1,0 +1,201 @@
+"""Name-pattern parameter/activation partitioner (2D TP + FSDP).
+
+Logical rules (mesh axes: optional "pod" + "data" + "model"):
+
+* weights: d_model-like dims shard over "data" (FSDP — all-gathered per
+  layer under the scan), head/ffn/vocab dims over "model" (tensor
+  parallelism).  "pod" never shards weights (pure DP: weights replicated
+  across pods, gradient all-reduce crosses DCN once per step).
+* MoE experts shard over "data" (expert parallelism) with expert-ffn over
+  "model".
+* activations/caches: batch over ("pod","data") when divisible; full
+  KV-cache sequence dim over "model" (decode is weight- and cache-bound;
+  sequence-sharded attention is flash-decode across chips).
+* anything small (norms, biases, scalars, LoRA A) replicates.
+
+Dims that do not divide their assigned axis fall back to replication — the
+partitioner is total: every leaf gets a valid spec.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _fit(dim: int, axis: Optional[str], mesh: Mesh):
+    """axis if it divides dim else None."""
+    if axis is None or axis not in mesh.axis_names:
+        return None
+    return axis if dim % mesh.shape[axis] == 0 else None
+
+
+# (regex on '/'-joined path, spec template per trailing dims)
+# templates use 'D' -> data, 'M' -> model, '.' -> replicated; leading stack
+# dims ('n') are always replicated.
+_PARAM_RULES = [
+    (r"embed$",                 ("M", "D")),
+    (r"lm_head$",               ("D", "M")),
+    (r"vision_proj$",           (".", "D")),
+    (r"(wq|wq_x)$",             (".", "D", "M")),
+    (r"(wk|wv|wk_x|wv_x)$",     (".", "D", "M")),
+    (r"(wo|wo_x)$",             (".", "M", "D")),
+    (r"(wi|wg)$",               (".", "D", "M")),
+    (r"wo_ff$",                 (".", "M", "D")),
+    (r"moe/router$",            (".", "D", ".")),
+    # experts over "model" (aligns with the token-side dispatch layout so
+    # no (data<->model) transpose of the dispatch buffer is ever needed);
+    # expert d_model over "data" = FSDP, re-gathered per layer in the scan
+    (r"moe/we_(gate|up)$",      (".", "M", "D", ".")),
+    (r"moe/we_down$",           (".", "M", ".", "D")),
+    (r"moe/ws_(gate|up)$",      (".", "D", "M")),
+    (r"moe/ws_down$",           (".", "M", "D")),
+    (r"w_dq$",                  (".", "D", ".")),
+    (r"w_uq$",                  (".", ".", "M")),
+    (r"w_dkv$",                 (".", "D", ".")),
+    (r"(w_uk|w_uv)$",           (".", ".", "M")),
+    (r"w_o$",                   (".", "M", "D")),
+    (r"in_proj$",               (".", "D", ".")),
+    (r"out_proj$",              (".", ".", "D")),
+    (r"(w_gate|w_x)$",          (".", "D", "M")),
+    (r"(w_a|w_i)$",             (".", "M", "M")),   # second M never fits twice -> repl
+    (r"w_o$",                   (".", "M", "D")),
+    (r"mtp/proj$",              ("D", ".")),
+    (r"(A)$",                   (".", ".")),        # LoRA A: replicated
+    (r"(B)$",                   (".", "M")),        # LoRA B: vocab over model
+]
+
+_AXIS = {"D": ("data",), "M": ("model",), "DM": ("data", "model"), ".": ()}
+
+
+def _spec_for(path: str, shape, mesh: Mesh) -> P:
+    for pat, tmpl in _PARAM_RULES:
+        if re.search(pat, path):
+            tmpl = tmpl[-len(shape):] if len(tmpl) >= len(shape) else \
+                (".",) * (len(shape) - len(tmpl)) + tuple(tmpl)
+            used = set()
+            spec = []
+            for dim, t in zip(shape, tmpl):
+                choice = None
+                # try the template's axes jointly, then prefixes, then none
+                cand = [a for a in _AXIS[t]
+                        if a in mesh.axis_names and a not in used]
+                while cand:
+                    size = 1
+                    for a in cand:
+                        size *= mesh.shape[a]
+                    if dim % size == 0:
+                        choice = tuple(cand) if len(cand) > 1 else cand[0]
+                        used.update(cand)
+                        break
+                    cand = cand[:-1]
+                spec.append(choice)
+            return P(*spec)
+    return P()           # norms, biases, scalars, conv weights, lambdas ...
+
+
+def _path_str(path) -> str:
+    return "/".join(str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+                    for p in path)
+
+
+def param_specs(tree, mesh: Mesh):
+    """Pytree of PartitionSpec matching `tree` (arrays or ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(_path_str(path), leaf.shape, mesh), tree)
+
+
+def param_shardings(tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(tree, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activations / caches
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh, batch: int, include_model: bool = False):
+    """Largest prefix of ("pod","data"[,"model"]) that divides `batch`.
+
+    include_model=True is the pure-FSDP training layout: the DVI train step
+    has no backbone backward, so spending the model axis on batch (and
+    gathering weights per layer) beats Megatron-style TP whose activation
+    all-reduces dominate (EXPERIMENTS.md §Perf H4)."""
+    names = ("pod", "data", "model") if include_model else ("pod", "data")
+    axes = [a for a in names if a in mesh.axis_names]
+    total = 1
+    use = []
+    for a in axes:
+        if batch % (total * mesh.shape[a]) == 0:
+            use.append(a)
+            total *= mesh.shape[a]
+    return tuple(use) if use else None
+
+
+def tokens_spec(mesh: Mesh, batch: int, include_model: bool = False) -> P:
+    return P(batch_axes(mesh, batch, include_model), None)
+
+
+def cache_specs(cfg: ModelConfig, cache_tree, mesh: Mesh,
+                seq_axis: Optional[str] = "model"):
+    """Specs for the decode cache pytree.
+
+    attention k/v (n, B, S, KV, hd): batch over data axes, S over `seq_axis`
+    (flash-decode sequence sharding); MLA latents (n, B, S, r) likewise;
+    stateful conv/ssd states: batch over data axes only."""
+    def spec(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        if name.endswith("lengths") or name.endswith("pos"):
+            return P()
+        b_ax = None
+        s_ax = None
+        if len(shape) >= 2:
+            b_ax = batch_axes(mesh, shape[1])
+        if name.endswith(("/k", "/v")) and len(shape) == 5:
+            s_ax = _fit(shape[2], seq_axis, mesh)
+            return P(None, b_ax, s_ax, None, None)
+        if name.endswith(("/ks", "/vs")) and len(shape) == 4:
+            s_ax = _fit(shape[2], seq_axis, mesh)
+            return P(None, b_ax, s_ax, None)
+        if name.endswith(("ckv", "krope")) and len(shape) == 4:
+            s_ax = _fit(shape[2], seq_axis, mesh)
+            return P(None, b_ax, s_ax, None)
+        if name.endswith(("xk", "xv")) and len(shape) == 5:
+            return P(None, b_ax, None, _fit(shape[3], "model", mesh), None)
+        # stateful: conv (n,B,cw-1,c) / state (n,B,...)
+        return P(*([None, b_ax] + [None] * (len(shape) - 2)))
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def constrain_cache_tree(cfg: ModelConfig, cache):
+    """with_sharding_constraint the whole cache pytree to its canonical
+    specs (no-op outside a mesh context) — keeps prefill-produced and
+    decode-updated caches sequence/batch-sharded through jit boundaries."""
+    from repro.launch import hints
+    mesh = hints._MESH
+    if mesh is None or not getattr(mesh, "axis_names", None):
+        return cache
+    specs = cache_specs(cfg, cache, mesh)
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s)),
+        cache, specs)
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

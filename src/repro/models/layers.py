@@ -1,0 +1,249 @@
+"""Shared layer primitives: RMSNorm, RoPE, GQA attention, GLU MLPs.
+
+Conventions
+-----------
+* activations: (B, T, d); attention heads laid out (B, T, H, hd).
+* norms and softmax run in float32 regardless of model dtype.
+* KV caches are written eagerly at ``lengths + i``; speculative rollback is
+  handled purely by length masking (full cache) or by a slack ring buffer
+  (sliding-window cache) — see ``repro/models/transformer.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def head_rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Per-head qk RMSNorm (Qwen3): x (..., H, hd), w (hd,)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, hd); positions: (B, T) int32.  Half-split convention."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                            # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B, T, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(num_pos: int, dim: int) -> jax.Array:
+    """Whisper-style sinusoidal embeddings (num_pos, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    ang = jnp.arange(num_pos, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array,
+           scale: Optional[float] = None) -> jax.Array:
+    """q (B,Tq,H,hd), k/v (B,Tk,KV,hd), mask (B,Tq,Tk) or (Tq,Tk) bool.
+
+    GQA: H must be a multiple of KV; query heads are grouped onto kv heads.
+    Returns (B, Tq, H, hd_v).
+    """
+    B, Tq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Tq, KV, G, hd)
+    scores = jnp.einsum("btkgh,bskh->bkgts", qg, k).astype(jnp.float32) * scale
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs, v)
+    return out.reshape(B, Tq, KV * G, v.shape[-1])
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskSpec:
+    """Declarative attention mask: causal [+ window] [+ bidirectional prefix]
+    or fully bidirectional.  Used instead of materialized (Tq, Tk) masks so
+    the flash path never builds a quadratic tensor."""
+    window: int = 0
+    prefix_len: int = 0
+    bidirectional: bool = False
+
+    def allowed(self, qpos, kpos):
+        """qpos (..., Tq, 1), kpos (..., 1, Tk) -> bool."""
+        if self.bidirectional:
+            return jnp.ones(jnp.broadcast_shapes(qpos.shape, kpos.shape), bool)
+        m = kpos <= qpos
+        if self.window:
+            m &= kpos > qpos - self.window
+        if self.prefix_len:
+            m |= (qpos < self.prefix_len) & (kpos < self.prefix_len)
+        return m
+
+
+# flash path kicks in above this many score elements (per example pair)
+_FLASH_THRESHOLD = 1024 * 1024
+
+
+def attend_full(q: jax.Array, k: jax.Array, v: jax.Array, spec: MaskSpec,
+                q_chunk: int = 256, k_chunk: int = 1024) -> jax.Array:
+    """Full-sequence self-attention with a declarative mask.
+
+    Small T: materialize the mask and use `attend`.  Large T: blockwise
+    online-softmax (flash) via lax.scan over (q-chunk, k-chunk) — memory
+    O(T * k_chunk) instead of O(T^2), which is what makes the 32k prefill
+    and 4k x 256-batch training shapes lowerable."""
+    B, Tq, H, hd = q.shape
+    Tk = k.shape[1]
+    if Tq * Tk <= _FLASH_THRESHOLD:
+        mask = causal_mask(Tq, Tk, window=spec.window, prefix_len=spec.prefix_len) \
+            if not spec.bidirectional else jnp.ones((Tq, Tk), bool)
+        return attend(q, k, v, mask)
+
+    KV = k.shape[2]
+    hdv = v.shape[-1]                       # may differ from hd (MLA)
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qc = min(q_chunk, Tq)
+    kc = min(k_chunk, Tk)
+    pad_q = (-Tq) % qc
+    pad_k = (-Tk) % kc
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    # padded key slots masked off via kpos >= Tk
+    real_k = Tk
+    nq, nk = qp.shape[1] // qc, kp.shape[1] // kc
+    from repro.launch.hints import hint
+    qb = jnp.moveaxis(qp.reshape(B, nq, qc, KV, G, hd), 1, 0)   # (nq,B,qc,KV,G,hd)
+    kb = jnp.moveaxis(kp.reshape(B, nk, kc, KV, hd), 1, 0)
+    vb = jnp.moveaxis(vp.reshape(B, nk, kc, KV, hdv), 1, 0)
+    # batch takes both axes when it divides (pure-FSDP training layout —
+    # weights are gathered per layer, so heads stay unsharded); otherwise
+    # batch on "data" and heads on "model": KV dim when it divides
+    # (MHA/MLA), else query-head groups (GQA).  hint() dedups axes.
+    qb = hint(qb, None, ("data", "model"), None, "model", "model", None)
+    kb = hint(kb, None, ("data", "model"), None, "model", None)
+    vb = hint(vb, None, ("data", "model"), None, "model", None)
+
+    def q_step(_, qi_and_blk):
+        qi, qblk = qi_and_blk                                   # (B,qc,KV,G,hd)
+        qpos = qi * qc + jnp.arange(qc)
+
+        def k_step(carry, kj_and_blk):
+            m_run, l_run, acc = carry
+            kj, kblk, vblk = kj_and_blk
+            kpos = kj * kc + jnp.arange(kc)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qblk, kblk).astype(jnp.float32) * scale
+            allowed = spec.allowed(qpos[:, None], kpos[None, :]) \
+                & (kpos[None, :] < real_k)
+            s = jnp.where(allowed[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(vblk.dtype), vblk).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KV, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qc, hdv), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        o = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        o = jnp.moveaxis(o, 3, 1).reshape(B, qc, KV * G, hdv)    # (B,qc,H,hdv)
+        return None, o.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * qc, H, hdv)
+    return out[:, :Tq]
+
+
+def causal_mask(Tq: int, Tk: int, offset: int = 0, window: int = 0,
+                prefix_len: int = 0) -> jax.Array:
+    """(Tq, Tk) bool.  Query i sits at absolute position offset+i; key j at j.
+
+    window > 0: sliding-window (local) attention.
+    prefix_len > 0: bidirectional attention within keys/queries < prefix_len
+    (prefix-LM, PaliGemma image prefix).
+    """
+    qpos = offset + jnp.arange(Tq)[:, None]
+    kpos = jnp.arange(Tk)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    if prefix_len:
+        m |= (qpos < prefix_len) & (kpos < prefix_len)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp(p: dict, x: jax.Array, act: str, glu: bool) -> jax.Array:
+    fn = jax.nn.silu if act == "silu" else (lambda u: jax.nn.gelu(u, approximate=True))
+    h = x @ p["wi"]
+    if glu:
+        h = fn(h) * (x @ p["wg"])
+    else:
+        h = fn(h)
+    return h @ p["wo_ff"]
+
+
+def conv1d_causal(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv.  x (B,T,C), w (cw,C).  state (B,cw-1,C) holds
+    the trailing inputs of the previous block.  Returns (y, new_state)."""
+    cw = w.shape[0]
+    B, T, C = x.shape
+    if state is None:
+        state = jnp.zeros((B, cw - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)             # (B, T+cw-1, C)
+    y = jnp.zeros((B, T, C), jnp.float32)
+    for i in range(cw):
+        y = y + xp[:, i:i + T].astype(jnp.float32) * w[i].astype(jnp.float32)
+    new_state = xp[:, T:]                                # last cw-1 inputs
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Parameter init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))

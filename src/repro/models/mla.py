@@ -1,0 +1,110 @@
+"""DeepSeek-V3 Multi-head Latent Attention [arXiv:2412.19437].
+
+The KV cache stores only the compressed latent ``c_kv`` (kv_lora_rank) plus
+the shared RoPE key (qk_rope_head_dim) per token — a ~14x cache reduction
+vs. MHA at 128 heads.  Decode uses the *absorbed* form (W_uk folded into the
+query, W_uv applied after attention over latents) so the per-step cost is
+O(S * (r_kv + d_rope)) per head instead of O(S * (d_nope + d_rope)) plus
+decompression.  Prefill/train uses the naive decompressed form (better MXU
+utilization at large T).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.models.layers import (NEG_INF, apply_rope, attend_full, dense_init,
+                                 rms_norm, split_keys)
+
+
+def init_mla(key, n: int, d: int, H: int, m: MLAConfig, dtype) -> dict:
+    ks = split_keys(key, 8)
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    return {
+        "w_dq": dense_init(ks[0], (n, d, m.q_lora_rank), dtype),
+        "q_ln": jnp.zeros((n, m.q_lora_rank), jnp.float32),
+        "w_uq": dense_init(ks[1], (n, m.q_lora_rank, H * (dn + dr)), dtype),
+        "w_dkv": dense_init(ks[2], (n, d, m.kv_lora_rank), dtype),
+        "kv_ln": jnp.zeros((n, m.kv_lora_rank), jnp.float32),
+        "w_kr": dense_init(ks[3], (n, d, dr), dtype),
+        "w_uk": dense_init(ks[4], (n, m.kv_lora_rank, H * dn), dtype),
+        "w_uv": dense_init(ks[5], (n, m.kv_lora_rank, H * dv), dtype),
+        "w_o": dense_init(ks[6], (n, H * dv, d), dtype),
+    }
+
+
+def _queries(p, xn, H, m, positions, rope_theta):
+    B, T = xn.shape[:2]
+    dn, dr = m.qk_nope_head_dim, m.qk_rope_head_dim
+    q = rms_norm(xn @ p["w_dq"], p["q_ln"]) @ p["w_uq"]
+    q = q.reshape(B, T, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p, xn, positions, rope_theta):
+    ckv = rms_norm(xn @ p["w_dkv"], p["kv_ln"])                    # (B,T,r_kv)
+    krope = apply_rope((xn @ p["w_kr"])[:, :, None, :], positions, rope_theta)[:, :, 0]
+    return ckv, krope
+
+
+def mla_full(p: dict, xn: jax.Array, H: int, m: MLAConfig, positions, spec,
+             rope_theta: float):
+    """Decompressed attention over the full sequence (flash path for large T).
+
+    The shared RoPE key folds into per-head keys so standard attention with
+    head_dim = dn + dr computes q_nope.k_nope + q_rope.k_rope exactly.
+    xn: pre-normed (B,T,d); spec: MaskSpec.
+    Returns (attn_out (B,T,d), cache_contrib {ckv, krope})."""
+    B, T = xn.shape[:2]
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q_nope, q_rope = _queries(p, xn, H, m, positions, rope_theta)
+    ckv, krope = _latents(p, xn, positions, rope_theta)
+    k_nope = (ckv @ p["w_uk"]).reshape(B, T, H, dn)
+    v = (ckv @ p["w_uv"]).reshape(B, T, H, dv)
+    from repro.launch.hints import hint
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)         # (B,T,H,dn+dr)
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, :, None, :], (B, T, H, dr))], axis=-1)
+    q_cat = hint(q_cat, "data", None, "model", None)
+    k_cat = hint(k_cat, "data", None, "model", None)
+    v = hint(v, "data", None, "model", None)
+    out = attend_full(q_cat, k_cat, v, spec).reshape(B, T, H * dv)
+    return out @ p["w_o"], {"ckv": ckv, "krope": krope}
+
+
+def mla_step(p: dict, xn: jax.Array, cache_ckv, cache_krope, lengths,
+             H: int, m: MLAConfig, positions, rope_theta: float):
+    """Absorbed-form block decode.  cache_ckv (B,S,r_kv), cache_krope (B,S,dr).
+
+    Writes the block's latents eagerly at lengths..lengths+T-1 (rollback via
+    length masking).  Returns (attn_out, new_ckv, new_krope)."""
+    B, T = xn.shape[:2]
+    S = cache_ckv.shape[1]
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    r_kv = m.kv_lora_rank
+    q_nope, q_rope = _queries(p, xn, H, m, positions, rope_theta)
+    ckv, krope = _latents(p, xn, positions, rope_theta)
+
+    from repro.models.transformer import spread_write
+    new_ckv = spread_write(cache_ckv, ckv, lengths)
+    new_krope = spread_write(cache_krope, krope, lengths)
+
+    # absorb W_uk into q:  q_eff[b,t,h,:] = q_nope · W_uk_h  -> (B,T,H,r_kv)
+    w_uk = p["w_uk"].reshape(r_kv, H, dn)
+    q_eff = jnp.einsum("bthd,rhd->bthr", q_nope, w_uk)
+    scale = 1.0 / math.sqrt(dn + dr)
+    scores = (jnp.einsum("bthr,bsr->bhts", q_eff, new_ckv)
+              + jnp.einsum("bthd,bsd->bhts", q_rope, new_krope)).astype(jnp.float32) * scale
+    qpos = lengths[:, None] + jnp.arange(T)[None, :]               # (B,T)
+    mask = jnp.arange(S)[None, None, :] <= qpos[:, :, None]        # (B,T,S)
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(xn.dtype)
+    o_lat = jnp.einsum("bhts,bsr->bthr", probs, new_ckv)           # (B,T,H,r_kv)
+    w_uv = p["w_uv"].reshape(r_kv, H, dv)
+    out = jnp.einsum("bthr,rhd->bthd", o_lat, w_uv).reshape(B, T, H * dv)
+    return out @ p["w_o"], new_ckv, new_krope

@@ -1,0 +1,104 @@
+"""Griffin / RecurrentGemma recurrent block [arXiv:2402.19427].
+
+Block: x -> RMSNorm -> two branches:
+  (a) gate branch: GeLU(W_gate x)
+  (b) recurrent branch: causal conv1d(W_x x) -> RG-LRU
+merged multiplicatively, then output projection.  RG-LRU recurrence:
+  r_t = sigmoid(W_a u_t),  i_t = sigmoid(W_i u_t)
+  log a_t = -c * softplus(Lambda) * r_t           (c = 8)
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Full-sequence path uses ``jax.lax.associative_scan`` (parallel over T, which
+is how the deep path block-verifies drafted tokens); decode path scans over
+the block and returns per-step states for speculative commit-select.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RGLRUConfig
+from repro.models.layers import conv1d_causal, dense_init, rms_norm, split_keys
+
+_C = 8.0
+
+
+def init_rglru(key, n: int, d: int, r: RGLRUConfig, dtype) -> dict:
+    w = r.lru_width or d
+    ks = split_keys(key, 6)
+    return {
+        "ln1": jnp.zeros((n, d), jnp.float32),
+        "w_gate": dense_init(ks[0], (n, d, w), dtype),
+        "w_x": dense_init(ks[1], (n, d, w), dtype),
+        "conv_w": dense_init(ks[2], (n, r.d_conv, w), jnp.float32, scale=0.5),
+        "w_a": dense_init(ks[3], (n, w, w), dtype),
+        "w_i": dense_init(ks[4], (n, w, w), dtype),
+        # Lambda init so that a^c in [0.9, 0.999] at r=1 (Griffin appendix)
+        "lam": jnp.tile(jnp.linspace(0.5, 4.0, w, dtype=jnp.float32), (n, 1)),
+        "w_o": dense_init(ks[5], (n, w, d), dtype),
+    }
+
+
+def _gates(p, u):
+    rf = jax.nn.sigmoid((u @ p["w_a"]).astype(jnp.float32))
+    it = jax.nn.sigmoid((u @ p["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"])[None, None, :] * rf
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * it * u.astype(jnp.float32)
+    return a, b
+
+
+def rglru_forward_full(p: dict, x: jax.Array, r: RGLRUConfig, norm_eps: float,
+                       conv_state=None, h0=None):
+    """x (B,T,d).  Returns (y, cache_contrib {conv, state})."""
+    xn = rms_norm(x, p["ln1"], norm_eps)
+    gate = jax.nn.gelu((xn @ p["w_gate"]).astype(jnp.float32), approximate=True)
+    u, conv_state = conv1d_causal(xn @ p["w_x"], p["conv_w"], conv_state)
+    a, b = _gates(p, u)                                    # (B,T,w) f32
+    if h0 is not None:
+        # fold initial state into the first element: h_1 = a_1 h0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    A, Bv = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = Bv                                                 # (B,T,w)
+    y = (h * gate).astype(x.dtype) @ p["w_o"]
+    return x + y, {"conv": conv_state, "state": h[:, -1]}
+
+
+def rglru_step(p: dict, x: jax.Array, cache: dict, r: RGLRUConfig,
+               norm_eps: float):
+    """Block decode; returns (y, candidates {conv (B,T,cw-1,w), state (B,T,w)})."""
+    B_, T, d = x.shape
+    xn = rms_norm(x, p["ln1"], norm_eps)
+    gate = jax.nn.gelu((xn @ p["w_gate"]).astype(jnp.float32), approximate=True)
+    ux = xn @ p["w_x"]
+
+    def step_fn(carry, u_t):
+        conv_st, h = carry
+        win = jnp.concatenate([conv_st, u_t[:, None]], axis=1)  # (B,cw,w)
+        u = jnp.sum(win.astype(jnp.float32) * p["conv_w"][None], axis=1)
+        u = u.astype(x.dtype)[:, None]                          # (B,1,w)
+        a, b = _gates(p, u)
+        h = a[:, 0] * h + b[:, 0]
+        new_conv = win[:, 1:]
+        return (new_conv, h), (h, new_conv)
+
+    (_, _), (hs, convs) = jax.lax.scan(
+        step_fn, (cache["conv"], cache["state"].astype(jnp.float32)),
+        jnp.moveaxis(ux, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1)                             # (B,T,w)
+    y = (h * gate).astype(x.dtype) @ p["w_o"]
+    cand = {"conv": jnp.moveaxis(convs, 0, 1), "state": h}
+    return x + y, cand
+
+
+def init_rglru_cache(n: int, B: int, d: int, r: RGLRUConfig, dtype):
+    w = r.lru_width or d
+    return {"conv": jnp.zeros((n, B, r.d_conv - 1, w), dtype),
+            "state": jnp.zeros((n, B, w), jnp.float32)}

@@ -1,0 +1,185 @@
+"""Mamba-2 SSD block [arXiv:2405.21060].
+
+Full-sequence path uses the chunked state-space-duality form (intra-chunk
+quadratic attention-like term on the MXU + inter-chunk linear recurrence) —
+the same decomposition the Pallas kernel (`repro/kernels/ssd_scan.py`)
+implements on TPU.  The decode path is the per-step recurrence
+``h_t = exp(dt*A) h_{t-1} + dt * B_t ⊗ x_t``;  ``step`` returns the state
+after *every* token in the block so the speculative commit can select the
+state at the accepted length (SSM states cannot be rolled back by masking
+the way KV caches can).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import conv1d_causal, dense_init, rms_norm, split_keys
+
+
+def ssm_dims(d_model: int, s: SSMConfig):
+    d_in = s.expand * d_model
+    H = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.ngroups * s.d_state
+    proj_dim = 2 * d_in + 2 * s.ngroups * s.d_state + H
+    return d_in, H, conv_dim, proj_dim
+
+
+def init_ssm(key, n: int, d: int, s: SSMConfig, dtype) -> dict:
+    d_in, H, conv_dim, proj_dim = ssm_dims(d, s)
+    ks = split_keys(key, 4)
+    return {
+        "ln1": jnp.zeros((n, d), jnp.float32),
+        "in_proj": dense_init(ks[0], (n, d, proj_dim), dtype),
+        "conv_w": dense_init(ks[1], (n, s.d_conv, conv_dim), jnp.float32, scale=0.5),
+        "A_log": jnp.tile(jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)), (n, 1)),
+        "D": jnp.ones((n, H), jnp.float32),
+        "dt_bias": jnp.tile(jnp.log(jnp.expm1(jnp.linspace(1e-3, 0.1, H))).astype(jnp.float32), (n, 1)),
+        "norm_w": jnp.zeros((n, d_in), jnp.float32),
+        "out_proj": dense_init(ks[2], (n, d_in, d), dtype),
+    }
+
+
+def _split_proj(zxbcdt, d_in, G, ds, H):
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + d_in + 2 * G * ds]
+    dt = zxbcdt[..., -H:]
+    return z, xBC, dt
+
+
+def _split_xbc(xBC, d_in, G, ds, H, hd):
+    B_, T = xBC.shape[0], xBC.shape[1]
+    xh = xBC[..., :d_in].reshape(B_, T, H, hd)
+    Bc = xBC[..., d_in:d_in + G * ds].reshape(B_, T, G, ds)
+    Cc = xBC[..., d_in + G * ds:].reshape(B_, T, G, ds)
+    return xh, Bc, Cc
+
+
+def ssd_chunked(xh, Bc, Cc, dt, A, chunk: int, h0=None):
+    """Chunked SSD scan (pure-jnp oracle shared with the Pallas kernel).
+
+    xh (B,T,H,hd), Bc/Cc (B,T,G,ds), dt (B,T,H) [post-softplus], A (H,) < 0.
+    Returns (y (B,T,H,hd), final_state (B,H,hd,ds)).  T % chunk == 0.
+    """
+    B_, T, H, hd = xh.shape
+    G, ds = Bc.shape[2], Bc.shape[3]
+    nc = T // chunk
+    rep = H // G
+    f32 = jnp.float32
+
+    # one chunk in flight at a time (lax.scan): the (B,Q,Q,H) intra-chunk
+    # decay tensor is the working set — materializing it for all chunks at
+    # once would be O(T/Q) larger (1 TB at 32k prefill).
+    xc = jnp.moveaxis(xh.reshape(B_, nc, chunk, H, hd), 1, 0).astype(f32)
+    Bcc = jnp.moveaxis(jnp.repeat(Bc.reshape(B_, nc, chunk, G, ds), rep,
+                                  axis=3), 1, 0).astype(f32)
+    Ccc = jnp.moveaxis(jnp.repeat(Cc.reshape(B_, nc, chunk, G, ds), rep,
+                                  axis=3), 1, 0).astype(f32)
+    dtc = jnp.moveaxis(dt.reshape(B_, nc, chunk, H), 1, 0).astype(f32)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_fn(h, inp):
+        x_, B__, C__, dt_ = inp                            # (B,Q,H,hd) etc.
+        dA = dt_ * A[None, None, :]                        # (B,Q,H)
+        cum = jnp.cumsum(dA, axis=1)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]      # (B,Q,Q,H)
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bihs,bjhs->bijh", C__, B__)
+        att = cb * decay * dt_[:, None, :, :]
+        y = jnp.einsum("bijh,bjhd->bihd", att, x_)
+        y = y + jnp.einsum("bihs,bhds,bih->bihd", C__, h, jnp.exp(cum))
+        dec_out = jnp.exp(cum[:, -1:, :] - cum) * dt_      # (B,Q,H)
+        chunk_state = jnp.einsum("bjh,bjhs,bjhd->bhds", dec_out, B__, x_)
+        h = h * jnp.exp(cum[:, -1])[:, :, None, None] + chunk_state
+        return h, y
+
+    h_init = jnp.zeros((B_, H, hd, ds), f32) if h0 is None else h0.astype(f32)
+    h_final, ys = jax.lax.scan(chunk_fn, h_init, (xc, Bcc, Ccc, dtc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B_, T, H, hd)
+    return y, h_final
+
+
+def ssm_forward_full(p: dict, x: jax.Array, s: SSMConfig, norm_eps: float,
+                     conv_state=None, h0=None):
+    """Full-sequence Mamba-2 block.  x (B,T,d).  Returns (y, cache_contrib)."""
+    d = x.shape[-1]
+    d_in, H, conv_dim, _ = ssm_dims(d, s)
+    G, ds, hd = s.ngroups, s.d_state, s.head_dim
+    xn = rms_norm(x, p["ln1"], norm_eps)
+    zxbcdt = xn @ p["in_proj"]
+    z, xBC, dt = _split_proj(zxbcdt, d_in, G, ds, H)
+    xBC, conv_state = conv1d_causal(xBC, p["conv_w"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xh, Bc, Cc = _split_xbc(xBC, d_in, G, ds, H, hd)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    T = x.shape[1]
+    chunk = min(s.chunk_size, T)
+    pad = (-T) % chunk
+    if pad:
+        padf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        xh, Bc, Cc, dtp = padf(xh), padf(Bc), padf(Cc), padf(dtp)
+    y, h_final = ssd_chunked(xh, Bc, Cc, dtp, A, chunk, h0=h0)
+    y = y[:, :T]
+    y = y + xh[:, :T].astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(x.shape[0], T, d_in)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                 p["norm_w"], norm_eps)
+    out = y @ p["out_proj"]
+    return x + out, {"conv": conv_state, "state": h_final}
+
+
+def ssm_step(p: dict, x: jax.Array, cache: dict, s: SSMConfig, norm_eps: float):
+    """Block decode: x (B,T,d) with T small (k_spec+1).
+
+    Returns (y (B,T,d), candidates) where candidates holds the conv window
+    and SSD state after each of the T steps (for speculative commit-select).
+    """
+    B_, T, d = x.shape
+    d_in, H, conv_dim, _ = ssm_dims(d, s)
+    G, ds, hd = s.ngroups, s.d_state, s.head_dim
+    xn = rms_norm(x, p["ln1"], norm_eps)
+    zxbcdt = xn @ p["in_proj"]
+    z, xBC, dt = _split_proj(zxbcdt, d_in, G, ds, H)
+    A = -jnp.exp(p["A_log"])
+
+    def step_fn(carry, inp):
+        conv_st, h = carry
+        xbc_t, dt_t = inp                                   # (B,conv_dim), (B,H)
+        win = jnp.concatenate([conv_st, xbc_t[:, None]], axis=1)  # (B,cw,conv)
+        cw = p["conv_w"].shape[0]
+        y = jnp.sum(win.astype(jnp.float32) * p["conv_w"][None], axis=1)
+        y = jax.nn.silu(y).astype(x.dtype)
+        xh = y[:, :d_in].reshape(B_, H, hd)
+        Bc = y[:, d_in:d_in + G * ds].reshape(B_, G, ds)
+        Cc = y[:, d_in + G * ds:].reshape(B_, G, ds)
+        rep = H // G
+        Bch = jnp.repeat(Bc, rep, axis=1).astype(jnp.float32)
+        Cch = jnp.repeat(Cc, rep, axis=1).astype(jnp.float32)
+        dtp = jax.nn.softplus(dt_t.astype(jnp.float32) + p["dt_bias"])
+        da = jnp.exp(dtp * A[None, :])                      # (B,H)
+        h = h * da[..., None, None] + jnp.einsum(
+            "bh,bhs,bhd->bhds", dtp, Bch, xh.astype(jnp.float32))
+        yt = jnp.einsum("bhs,bhds->bhd", Cch, h)
+        yt = yt + xh.astype(jnp.float32) * p["D"][None, :, None]
+        new_conv = win[:, 1:]
+        return (new_conv, h), (yt, new_conv, h)
+
+    (_, _), (ys, convs, hs) = jax.lax.scan(
+        step_fn, (cache["conv"], cache["state"]),
+        (jnp.moveaxis(xBC, 1, 0), jnp.moveaxis(dt, 1, 0)))
+    ys = jnp.moveaxis(ys, 0, 1).reshape(B_, T, d_in)        # (B,T,d_in)
+    y = rms_norm((ys * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                 p["norm_w"], norm_eps)
+    out = x + y @ p["out_proj"]
+    cand = {"conv": jnp.moveaxis(convs, 0, 1),              # (B,T,cw-1,conv_dim)
+            "state": jnp.moveaxis(hs, 0, 1)}                # (B,T,H,hd,ds)
+    return out, cand
+
+
+def init_ssm_cache(n: int, B: int, d: int, s: SSMConfig, dtype):
+    d_in, H, conv_dim, _ = ssm_dims(d, s)
+    return {"conv": jnp.zeros((n, B, s.d_conv - 1, conv_dim), dtype),
+            "state": jnp.zeros((n, B, H, s.head_dim, s.d_state), jnp.float32)}

@@ -1,0 +1,3 @@
+from repro.serving.engine import ServingEngine, Request, Completion
+
+__all__ = ["ServingEngine", "Request", "Completion"]

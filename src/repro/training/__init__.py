@@ -1,0 +1,4 @@
+from repro.training.pretrain import (lm_loss, make_pretrain_step, pretrain,
+                                     make_dvi_train_step)
+
+__all__ = ["lm_loss", "make_pretrain_step", "pretrain", "make_dvi_train_step"]

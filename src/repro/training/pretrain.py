@@ -1,0 +1,90 @@
+"""Backbone pretraining (substrate) + the DVI drafter train step.
+
+``make_pretrain_step`` — full-model next-token cross-entropy with AdamW;
+used to give tiny backbones real predictive structure before DVI online
+learning (and as the generic ``--step pretrain`` dry-run workload).
+
+``make_dvi_train_step`` — the paper's training workload (the `train_4k`
+dry-run shape): forward h_k -> h_L once, composite KL->RL loss, gradients
+and Adam state for the LoRA adapters ONLY (the backbone never sees a
+gradient — that is what makes training-aware serving cheap).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses as losses_mod
+from repro.models.model import Model
+from repro.optim import adamw_init, adamw_update
+
+
+def lm_loss(model: Model, params, tokens, aux_inputs=None, remat=False):
+    logits, aux = model.forward_train(params, tokens, aux_inputs, remat=remat)
+    V = model.cfg.vocab_size
+    P = model.cfg.vision.num_patches if model.cfg.vision is not None else 0
+    logits = logits[:, P:, :]
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean() + aux, {"nll": nll.mean(), "aux": aux}
+
+
+def make_pretrain_step(model: Model, lr, remat: bool = False,
+                       donate: bool = True):
+    """lr: float or schedule fn(step)->lr."""
+    lr_fn = lr if callable(lr) else (lambda s: lr)
+
+    @partial(jax.jit, donate_argnums=(0, 1) if donate else ())
+    def step(params, opt_state, tokens, aux_inputs=None):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm_loss(model, p, tokens, aux_inputs, remat),
+            has_aux=True)(params)
+        params, opt_state, gnorm = adamw_update(
+            params, grads, opt_state, lr_fn(opt_state["step"]),
+            weight_decay=0.01)
+        metrics["loss"] = loss
+        metrics["gnorm"] = gnorm
+        return params, opt_state, metrics
+
+    return step
+
+
+def pretrain(model: Model, params, data_stream, *, lr=1e-3, remat=False,
+             log_every: int = 0, aux_inputs_fn=None):
+    """Train the backbone over a stream of (B, T) token batches."""
+    opt_state = adamw_init(params)
+    step_fn = make_pretrain_step(model, lr, remat)
+    losses = []
+    for i, tokens in enumerate(data_stream):
+        aux = aux_inputs_fn(tokens) if aux_inputs_fn else None
+        params, opt_state, metrics = step_fn(params, opt_state, tokens, aux)
+        losses.append(float(metrics["loss"]))
+        if log_every and (i + 1) % log_every == 0:
+            print(f"[pretrain] step {i+1}: loss={losses[-1]:.4f}")
+    return params, losses
+
+
+def make_dvi_train_step(model: Model, lr: float = 1e-3, mode: str = "full",
+                        remat: bool = False):
+    """The paper's drafter-update step over a token batch (train_4k shape)."""
+
+    @jax.jit
+    def step(params, dvi_params, opt_state, tokens, t, baseline,
+             aux_inputs=None):
+        def loss_fn(dp):
+            return losses_mod.dense_train_losses(
+                model, params, dp, tokens, t, baseline, mode, aux_inputs,
+                remat)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(dvi_params)
+        dvi_params, opt_state, gnorm = adamw_update(dvi_params, grads,
+                                                    opt_state, lr)
+        ema = model.cfg.dvi.baseline_ema
+        baseline = ema * baseline + (1 - ema) * metrics["acc_rate"]
+        metrics["gnorm"] = gnorm
+        return dvi_params, opt_state, baseline, metrics
+
+    return step

@@ -1,0 +1,41 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.models.model import build_model
+
+ARCHS = ALL_ARCHS  # includes vicuna-7b (the paper's backbone) + 10 assigned
+
+
+def tiny_cfg(name: str):
+    """fp32 reduced config (exact argmax comparisons need fp32)."""
+    return get_config(name, tiny=True).replace(dtype="float32")
+
+
+def make_aux(cfg, B, seed=3):
+    aux = {}
+    if cfg.vision is not None:
+        aux["patch_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(seed), (B, cfg.vision.num_patches, cfg.vision.d_embed))
+    if cfg.encoder is not None:
+        aux["frame_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 1),
+            (B, cfg.encoder.num_frames, cfg.encoder.d_model or cfg.d_model))
+    return aux or None
+
+
+@pytest.fixture(scope="session")
+def tiny_models():
+    """Cache of (cfg, model, params) per arch — init once per session."""
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = tiny_cfg(name)
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            cache[name] = (cfg, model, params)
+        return cache[name]
+
+    return get

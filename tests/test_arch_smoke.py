@@ -1,0 +1,60 @@
+"""Per-assigned-architecture smoke tests (deliverable f):
+
+For every architecture, instantiate the REDUCED same-family variant
+(<= 4 layers, d_model <= 512, <= 4 experts) and run one forward/train step
+on CPU asserting output shapes + no NaNs.  Full configs are exercised only
+via the dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import ARCHS, make_aux
+from repro.optim import adamw_init
+from repro.training import make_pretrain_step
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_shapes_no_nans(tiny_models, name):
+    cfg, model, params = tiny_models(name)
+    B, T = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab_size)
+    aux_in = make_aux(cfg, B)
+    logits, aux = model.forward_train(params, toks, aux_in)
+    P = cfg.vision.num_patches if cfg.vision is not None else 0
+    assert logits.shape == (B, T + P, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_one_train_step(tiny_models, name):
+    cfg, model, params = tiny_models(name)
+    B, T = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0, cfg.vocab_size)
+    aux_in = make_aux(cfg, B)
+    step = make_pretrain_step(model, lr=1e-3, donate=False)
+    opt = adamw_init(params)
+    params2, opt2, metrics = step(params, opt, toks, aux_in)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["gnorm"]) > 0
+    # at least one leaf actually moved
+    moved = any(
+        bool(jnp.any(a != b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert moved
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_decode_step_shapes(tiny_models, name):
+    """One-token decode against a prefilled cache (serve-path smoke)."""
+    cfg, model, params = tiny_models(name)
+    B = 2
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, 8), 0, cfg.vocab_size)
+    aux_in = make_aux(cfg, B)
+    _, cache, _ = model.prefill(params, toks, aux_in, max_len=32)
+    xb = model.embed_block(params, toks[:, -1:], cache["lengths"])
+    h, cache2, cands, _ = model.step(params, xb, cache)
+    assert h.shape == (B, 1, cfg.d_model)
+    assert bool(jnp.isfinite(h).all())
+    cache3 = model.commit(cache2, cands, jnp.ones((B,), jnp.int32))
+    assert bool(jnp.all(cache3["lengths"] == cache["lengths"] + 1))

@@ -1,0 +1,58 @@
+"""Baseline generators: losslessness + integration with DVI ablation modes."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import tiny_cfg
+from repro.configs.base import DVIConfig
+from repro.core import baselines, lora, spec
+from repro.models.model import build_model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_cfg("vicuna-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dcfg = cfg.replace(name="drafter", num_layers=2,
+                       dvi=DVIConfig(split_layer=1))
+    draft = build_model(dcfg)
+    d_params = draft.init(jax.random.PRNGKey(1))
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (3, 8), 2,
+                                 cfg.vocab_size)
+    r_ar = spec.ar_generate(model, params, prompts, 20)
+    return cfg, model, params, draft, d_params, prompts, r_ar
+
+
+def _lossless(r_ar, r, B=3):
+    for b in range(B):
+        n = min(int(r_ar.lengths[b]), int(r.lengths[b]))
+        if not bool(jnp.all(r_ar.tokens[b, :n] == r.tokens[b, :n])):
+            return False
+    return True
+
+
+def test_two_model_sd_lossless(setup):
+    cfg, model, params, draft, d_params, prompts, r_ar = setup
+    r = baselines.two_model_generate(model, params, draft, d_params,
+                                     prompts, 20)
+    assert _lossless(r_ar, r)
+    assert int(r.blocks) > 0
+
+
+def test_medusa_lossless(setup):
+    cfg, model, params, draft, d_params, prompts, r_ar = setup
+    heads = baselines.init_medusa_heads(jax.random.PRNGKey(9), model, 3)
+    r = baselines.medusa_generate(model, params, heads, prompts, 20)
+    assert _lossless(r_ar, r)
+    mat = float(r.committed) / float(r.blocks)
+    assert mat >= 1.9   # lm token always accepted => MAT >= ~2
+
+
+def test_static_self_spec_is_dvi_at_init(setup):
+    """Zhang'23-style static self-speculation == DVI with untrained LoRA."""
+    cfg, model, params, draft, d_params, prompts, r_ar = setup
+    dvi = lora.init_draft_params(jax.random.PRNGKey(3), cfg)
+    assert float(jnp.abs(dvi["B"]).sum()) == 0.0    # B=0 <=> frozen head @ h_k
+    r = spec.speculative_generate(model, params, dvi, prompts, 20)
+    assert _lossless(r_ar, r)

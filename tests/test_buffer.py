@@ -1,0 +1,73 @@
+"""Replay buffer invariants (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import buffer as B
+
+
+def _buf(slots=16):
+    cfg = get_config("vicuna-7b", tiny=True)
+    return B.init_buffer(cfg, slots=slots), cfg
+
+
+@given(st.lists(st.integers(1, 10), min_size=1, max_size=8))
+@settings(max_examples=20, deadline=None)
+def test_count_and_ptr_track_valid_writes(block_sizes):
+    buf, cfg = _buf(slots=16)
+    d = cfg.d_model
+    total = 0
+    for i, n in enumerate(block_sizes):
+        N = 12
+        valid = jnp.arange(N) < n
+        buf = B.add_block(
+            buf,
+            jnp.full((N, d), float(i)), jnp.full((N, d), float(i)),
+            jnp.full((N,), i), jnp.ones((N,)),
+            jnp.arange(N) + 1, jnp.zeros((N,), jnp.int32), valid)
+        total += n
+    assert int(buf["count"]) == min(total, 16)
+    assert int(buf["ptr"]) == total % 16
+
+
+def test_wraparound_keeps_newest():
+    buf, cfg = _buf(slots=8)
+    d = cfg.d_model
+    for i in range(4):
+        buf = B.add_block(
+            buf, jnp.full((4, d), float(i)), jnp.full((4, d), float(i)),
+            jnp.full((4,), i), jnp.ones((4,)), jnp.arange(4) + 1,
+            jnp.zeros((4,), jnp.int32), jnp.ones((4,), bool))
+    # 16 written into 8 slots -> actions present are from blocks 2 and 3
+    acts = set(np.asarray(buf["action"]).tolist())
+    assert acts == {2, 3}
+    fresh = B.fresh_batch(buf, 4)
+    assert np.asarray(fresh["action"]).tolist() == [3, 3, 3, 3]
+    assert np.asarray(fresh["mask"]).sum() == 4
+
+
+def test_sample_masks_when_underfull():
+    buf, cfg = _buf(slots=16)
+    d = cfg.d_model
+    buf = B.add_block(buf, jnp.zeros((4, d)), jnp.zeros((4, d)),
+                      jnp.zeros((4,), jnp.int32), jnp.ones((4,)),
+                      jnp.arange(4) + 1, jnp.zeros((4,), jnp.int32),
+                      jnp.ones((4,), bool))
+    batch = B.sample(buf, jax.random.PRNGKey(0), 8)
+    # with count=4, sampled indices < 4 are valid; mask reflects validity
+    assert batch["mask"].shape == (8,)
+    assert float(batch["mask"].sum()) == 8  # idx drawn in [0, count) -> all valid
+
+
+def test_counterfactual_rows_never_written():
+    buf, cfg = _buf(slots=16)
+    d = cfg.d_model
+    valid = jnp.array([True, True, False, False])
+    buf = B.add_block(buf, jnp.ones((4, d)), jnp.ones((4, d)),
+                      jnp.full((4,), 9), jnp.ones((4,)), jnp.arange(4) + 1,
+                      jnp.zeros((4,), jnp.int32), valid)
+    assert int(buf["count"]) == 2
+    assert np.asarray(buf["action"])[:2].tolist() == [9, 9]
+    assert np.asarray(buf["action"])[2:].sum() == 0

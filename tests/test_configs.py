@@ -1,0 +1,62 @@
+"""Config registry + published-size checks."""
+import pytest
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+
+# published parameter counts (billions) with acceptable relative slack —
+# our counting is analytic, the citations are the source of truth.
+PUBLISHED_B = {
+    "llama3-405b": (405.0, 0.02),
+    "recurrentgemma-9b": (9.0, 0.15),     # RG-LRU gate layout approximated
+    "qwen2.5-14b": (14.8, 0.05),
+    "llama4-scout-17b-a16e": (109.0, 0.05),
+    "whisper-large-v3": (1.55, 0.05),
+    "qwen3-0.6b": (0.6, 0.1),
+    "qwen3-1.7b": (1.7, 0.15),
+    "mamba2-370m": (0.37, 0.15),
+    "deepseek-v3-671b": (671.0, 0.02),
+    "vicuna-7b": (6.7, 0.03),
+}
+
+
+def test_registry_has_all_assigned():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert len(set(ASSIGNED_ARCHS)) == 10
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_config_valid(name):
+    cfg = get_config(name)
+    cfg.validate()
+    assert cfg.citation
+
+
+@pytest.mark.parametrize("name", list(PUBLISHED_B))
+def test_param_count_matches_published(name):
+    cfg = get_config(name)
+    target, slack = PUBLISHED_B[name]
+    got = cfg.param_count() / 1e9
+    assert abs(got - target) / target < slack, f"{name}: {got:.2f}B vs {target}B"
+
+
+def test_deepseek_active_params():
+    cfg = get_config("deepseek-v3-671b")
+    active = cfg.active_param_count() / 1e9
+    assert 33 < active < 42   # published: 37B activated
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_tiny_variants_reduced(name):
+    t = get_config(name, tiny=True)
+    t.validate()
+    assert t.d_model <= 512
+    assert t.num_layers <= 4
+    if t.moe is not None:
+        assert t.moe.num_experts <= 4
+
+
+def test_input_shapes():
+    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                                 "long_500k"}
+    assert INPUT_SHAPES["long_500k"].seq_len == 524_288
+    assert INPUT_SHAPES["train_4k"].global_batch == 256

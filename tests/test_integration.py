@@ -1,0 +1,97 @@
+"""End-to-end behaviour: pretraining reduces loss; online DVI learning
+raises acceptance (Fig. 2a dynamics); serving engine learns while serving;
+checkpoint round-trips."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.checkpoint import (load_checkpoint, load_lora, save_checkpoint,
+                              save_lora)
+from repro.core import lora, online
+from repro.data import ByteTokenizer, SyntheticTasks, TASK_CATEGORIES
+from repro.models.model import build_model
+from repro.serving import Request, ServingEngine
+from repro.training import pretrain
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = tiny_cfg("vicuna-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tasks = SyntheticTasks(cfg.vocab_size, seed=0)
+    params, losses = pretrain(
+        model, params, tasks.stream(TASK_CATEGORIES, 120, 16, 32, seed=9),
+        lr=2e-3)
+    return cfg, model, params, tasks, losses
+
+
+def test_pretrain_reduces_loss(trained):
+    _, _, _, _, losses = trained
+    assert losses[-1] < losses[0] * 0.5
+
+
+def test_online_dvi_acceptance_improves(trained):
+    cfg, model, params, tasks, _ = trained
+    state = online.init_trainer(model, jax.random.PRNGKey(7))
+    stream = tasks.stream(TASK_CATEGORIES, 40, 8, 16, seed=1)
+    state, hist = online.online_loop(model, params, stream, state,
+                                     max_new=20, mode="full", lr=3e-3)
+    first = float(np.mean(hist["block_acc"][:12]))
+    last = float(np.mean(hist["block_acc"][-12:]))
+    # acceptance stays high / never collapses (batch-level noise on a tiny
+    # stream is ±0.05, so the margin is deliberately loose; the strong
+    # climb assertion lives in benchmarks/table3 where the budget is 3x)
+    assert last > first - 0.06
+    assert last > 0.5                   # reaches useful acceptance
+    assert float(np.mean(hist["mat"][-12:])) > 2.0
+
+
+def test_serving_engine_learns_and_completes(trained):
+    cfg, model, params, tasks, _ = trained
+    state = online.init_trainer(model, jax.random.PRNGKey(3))
+    eng = ServingEngine(model, params, state, batch_size=4, max_new=12,
+                        buckets=(12,))
+    for i in range(8):
+        eng.submit(Request(uid=i, prompt=tasks.sample("qa", 1, 12, seed=i)[0]))
+    outs = eng.run()
+    assert len(outs) == 8
+    assert eng.stats["updates"] > 0
+    assert all(len(o.tokens) >= 12 for o in outs)
+
+
+def test_checkpoint_roundtrip(trained):
+    cfg, model, params, _, _ = trained
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "ck.npz")
+        save_checkpoint(path, params)
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        restored = load_checkpoint(path, zeros)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_lora_checkpoint_roundtrip(trained):
+    cfg, model, _, _, _ = trained
+    dvi = lora.init_draft_params(jax.random.PRNGKey(1), cfg)
+    dvi = dict(dvi, B=dvi["B"] + 0.5)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "lora.npz")
+        save_lora(path, dvi, step=42, baseline=0.7)
+        like = lora.init_draft_params(jax.random.PRNGKey(2), cfg)
+        dvi2, step, baseline = load_lora(path, like)
+        assert step == 42 and abs(baseline - 0.7) < 1e-6
+        np.testing.assert_array_equal(np.asarray(dvi["B"]), np.asarray(dvi2["B"]))
+
+
+def test_byte_tokenizer_deterministic():
+    tok = ByteTokenizer(512)
+    a = tok.encode("hello world")
+    b = tok.encode("hello world")
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 2 and a.max() < 512

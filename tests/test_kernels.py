@@ -1,0 +1,82 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.lora_logits import lora_logits
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.verify_argmax import verify_argmax
+
+I = dict(interpret=True)
+
+
+@pytest.mark.parametrize("T,d,V,bt,bv", [
+    (5, 64, 500, 16, 128), (128, 128, 2048, 64, 512), (33, 256, 1000, 8, 256),
+    (1, 32, 128, 8, 128), (64, 64, 4096, 64, 1024),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_verify_argmax(T, d, V, bt, bv, dtype):
+    h = jax.random.normal(jax.random.PRNGKey(T + V), (T, d), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(V), (d, V), dtype)
+    arg, mx = verify_argmax(h, w, block_t=bt, block_v=bv, **I)
+    arg_ref, mx_ref = ref.ref_verify_argmax(h, w)
+    np.testing.assert_array_equal(np.asarray(arg), np.asarray(arg_ref))
+    np.testing.assert_allclose(np.asarray(mx), np.asarray(mx_ref),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("T,d,V,r", [(5, 64, 500, 8), (64, 128, 1024, 16),
+                                     (17, 64, 300, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lora_logits(T, d, V, r, dtype):
+    h = jax.random.normal(jax.random.PRNGKey(0), (T, d), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (d, V), dtype)
+    a = jax.random.normal(jax.random.PRNGKey(2), (d, r), dtype)
+    b = jax.random.normal(jax.random.PRNGKey(3), (r, V), dtype)
+    out = lora_logits(h, w, a, b, 2.0, block_t=16, block_v=256, **I)
+    expect = ref.ref_lora_logits(h, w, a, b, 2.0)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("B,H,KV,hd,S,bs", [
+    (2, 8, 2, 32, 100, 32), (3, 16, 16, 64, 64, 64), (1, 4, 1, 128, 300, 128),
+    (2, 8, 8, 64, 33, 16),
+])
+def test_decode_attention(B, H, KV, hd, S, bs):
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, hd))
+    lens = jax.random.randint(jax.random.PRNGKey(3), (B,), 1, S + 1)
+    out = decode_attention(q, k, v, lens, block_s=bs, **I)
+    expect = ref.ref_decode_attention(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+
+
+@pytest.mark.parametrize("B,T,H,hd,ds,Q", [
+    (2, 64, 4, 16, 32, 16), (1, 128, 8, 64, 128, 64), (2, 32, 2, 8, 16, 32),
+])
+def test_ssd_scan(B, T, H, hd, ds, Q):
+    xh = jax.random.normal(jax.random.PRNGKey(0), (B, T, H, hd))
+    Bc = jax.random.normal(jax.random.PRNGKey(1), (B, T, 1, ds)) * 0.5
+    Cc = jax.random.normal(jax.random.PRNGKey(2), (B, T, 1, ds)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(3), (B, T, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(4), (H,)) * 0.3)
+    y, h = ssd_scan(xh, Bc, Cc, dt, A, chunk=Q, **I)
+    y_ref, h_ref = ref.ref_ssd_scan(xh, Bc, Cc, dt, A, Q)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=1e-4)
+
+
+def test_ops_wrappers_jit():
+    """ops.py jit'd wrappers dispatch to interpret mode on CPU."""
+    from repro.kernels import ops
+    h = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 256))
+    arg, mx = ops.verify_argmax(h, w, block_t=8, block_v=128)
+    arg_ref, _ = ref.ref_verify_argmax(h, w)
+    np.testing.assert_array_equal(np.asarray(arg), np.asarray(arg_ref))

@@ -1,0 +1,69 @@
+"""int8 KV cache (beyond-paper, cfg.kv_quant): halves decode cache bytes.
+
+Quantization perturbs the model slightly, so prefill+step tracks the
+full-precision path within tolerance — but DVI remains EXACTLY lossless
+with respect to its own (quantized) target path, because drafter and
+verifier read the same cache.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.core import lora, spec
+from repro.models.model import build_model
+from repro.models.transformer import kv_dequantize, kv_quantize
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 7, 4, 32)) * 3.0
+    q, s = kv_quantize(x)
+    assert q.dtype == jnp.int8
+    xr = kv_dequantize(q, s, jnp.float32)
+    rel = float(jnp.abs(xr - x).max() / jnp.abs(x).max())
+    assert rel < 0.01                      # 127-level symmetric quant
+
+
+@pytest.fixture(scope="module")
+def qmodel():
+    cfg = tiny_cfg("qwen3-0.6b").replace(kv_quant=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_cache_is_int8(qmodel):
+    cfg, model, params = qmodel
+    cache = model.init_cache(2, 32)
+    seg = cache["segs"]["s1"]
+    assert seg["k"].dtype == jnp.int8
+    assert "ks" in seg and seg["ks"].shape == seg["k"].shape[:-1]
+
+
+def test_quantized_step_tracks_full_precision(qmodel):
+    cfg, model, params = qmodel
+    fp_model = build_model(cfg.replace(kv_quant=False))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab_size)
+    _, cache_q, _ = model.prefill(params, toks[:, :8], max_len=32)
+    _, cache_f, _ = fp_model.prefill(params, toks[:, :8], max_len=32)
+    xb = model.embed_block(params, toks[:, 8:], cache_q["lengths"])
+    h_q, _, _, _ = model.step(params, xb, cache_q)
+    h_f, _, _, _ = fp_model.step(params, xb, cache_f)
+    rel = float(jnp.abs(h_q - h_f).max() / (jnp.abs(h_f).max() + 1e-9))
+    assert rel < 0.05, f"int8 cache diverged {rel:.3f} from fp"
+
+
+def test_dvi_still_lossless_under_quantized_cache(qmodel):
+    """Drafter and verifier share the quantized cache, so the committed
+    stream still equals (quantized-cache) greedy AR exactly."""
+    cfg, model, params = qmodel
+    dvi = lora.init_draft_params(jax.random.PRNGKey(5), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 2,
+                                 cfg.vocab_size)
+    r_ar = spec.ar_generate(model, params, prompts, 20)
+    r_sd = spec.speculative_generate(model, params, dvi, prompts, 20)
+    for b in range(2):
+        n = min(int(r_ar.lengths[b]), int(r_sd.lengths[b]))
+        assert bool(jnp.all(r_ar.tokens[b, :n] == r_sd.tokens[b, :n]))

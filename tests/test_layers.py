@@ -1,0 +1,113 @@
+"""Layer primitive properties (hypothesis where shapes permit)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.models.layers as L
+from repro.models.layers import (MaskSpec, apply_rope, attend, attend_full,
+                                 causal_mask, conv1d_causal, rms_norm)
+
+
+def test_rms_norm_scale_invariant_direction():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8))
+    w = jnp.zeros((8,))
+    y1 = rms_norm(x, w)
+    y2 = rms_norm(3.0 * x, w)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(jnp.mean(y1 * y1, -1)), np.ones(4), rtol=1e-4)
+
+
+def test_rope_preserves_norm_and_relativity():
+    """RoPE is a rotation (norm-preserving) and q.k depends only on the
+    relative distance."""
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (1, 4, 2, 32))
+    pos = jnp.array([[0, 5, 9, 21]])
+    y = apply_rope(x, pos, theta=10000.0)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+    q = jax.random.normal(key, (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 32))
+    def dot_at(pq, pk):
+        qr = apply_rope(q, jnp.array([[pq]]), 1e4)
+        kr = apply_rope(k, jnp.array([[pk]]), 1e4)
+        return float(jnp.sum(qr * kr))
+    assert abs(dot_at(7, 3) - dot_at(14, 10)) < 1e-4
+    assert abs(dot_at(7, 3) - dot_at(8, 3)) > 1e-6   # actually position-dep
+
+
+def test_gqa_equals_mha_when_repeated():
+    """GQA with KV heads replicated to H must equal MHA."""
+    key = jax.random.PRNGKey(0)
+    B, T, H, hd = 2, 6, 4, 16
+    q = jax.random.normal(key, (B, T, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, T, 2, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, T, 2, hd))
+    mask = causal_mask(T, T)
+    out_gqa = attend(q, k, v, mask)
+    k_full = jnp.repeat(k, 2, axis=2)
+    v_full = jnp.repeat(v, 2, axis=2)
+    out_mha = attend(q, k_full, v_full, mask)
+    np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha),
+                               atol=1e-5)
+
+
+@given(st.integers(16, 80), st.integers(0, 2), st.sampled_from([0, 8, 24]),
+       st.integers(0, 12))
+@settings(max_examples=12, deadline=None)
+def test_flash_matches_naive(T, kvh_exp, window, prefix):
+    KV = 2 ** kvh_exp
+    H = KV * 2
+    hd = 16
+    q = jax.random.normal(jax.random.PRNGKey(T), (1, T, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(T + 1), (1, T, KV, hd))
+    v = jax.random.normal(jax.random.PRNGKey(T + 2), (1, T, KV, hd))
+    spec = MaskSpec(window=window, prefix_len=prefix)
+    naive = attend_full(q, k, v, spec)
+    old = L._FLASH_THRESHOLD
+    try:
+        L._FLASH_THRESHOLD = 1
+        flash = attend_full(q, k, v, spec, q_chunk=16, k_chunk=16)
+    finally:
+        L._FLASH_THRESHOLD = old
+    np.testing.assert_allclose(np.asarray(naive), np.asarray(flash),
+                               atol=2e-5)
+
+
+def test_flash_cross_attention_rect():
+    """Tq != Tk (whisper cross-attention) incl. key padding."""
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 50, 4, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 23, 4, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 23, 4, 16))
+    spec = MaskSpec(bidirectional=True)
+    naive = attend(q, k, v, jnp.ones((50, 23), bool))
+    old = L._FLASH_THRESHOLD
+    try:
+        L._FLASH_THRESHOLD = 1
+        flash = attend_full(q, k, v, spec, q_chunk=16, k_chunk=16)
+    finally:
+        L._FLASH_THRESHOLD = old
+    np.testing.assert_allclose(np.asarray(naive), np.asarray(flash), atol=2e-5)
+
+
+def test_conv1d_causal_matches_shifted_and_stateful():
+    B, T, C, cw = 2, 10, 3, 4
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, T, C))
+    w = jax.random.normal(jax.random.PRNGKey(1), (cw, C))
+    y, state = conv1d_causal(x, w)
+    # causality: output t depends only on x[<=t]
+    x2 = x.at[:, 5:].set(0.0)
+    y2, _ = conv1d_causal(x2, w)
+    np.testing.assert_allclose(np.asarray(y[:, :5]), np.asarray(y2[:, :5]),
+                               atol=1e-6)
+    # streaming: split into two halves with carried state == full
+    ya, sa = conv1d_causal(x[:, :6], w)
+    yb, _ = conv1d_causal(x[:, 6:], w, state=sa)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([ya, yb], 1)),
+                               np.asarray(y), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(x[:, -cw + 1:]),
+                               atol=1e-6)

@@ -1,0 +1,119 @@
+"""Mixer-level references: SSD vs naive recurrence, RG-LRU scan vs step,
+MLA absorbed-vs-full, MoE routing invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import moe as moe_mod
+from repro.models.ssm import ssd_chunked
+
+
+def naive_ssd(xh, Bc, Cc, dt, A):
+    """Token-by-token linear recurrence (the definition SSD must match)."""
+    B_, T, H, hd = xh.shape
+    G, ds = Bc.shape[2], Bc.shape[3]
+    rep = H // G
+    h = np.zeros((B_, H, hd, ds))
+    ys = np.zeros((B_, T, H, hd))
+    for t in range(T):
+        da = np.exp(np.asarray(dt[:, t]) * np.asarray(A)[None])      # (B,H)
+        Bt = np.repeat(np.asarray(Bc[:, t]), rep, axis=1)            # (B,H,ds)
+        Ct = np.repeat(np.asarray(Cc[:, t]), rep, axis=1)
+        xt = np.asarray(xh[:, t])                                    # (B,H,hd)
+        h = h * da[:, :, None, None] + np.einsum(
+            "bh,bhs,bhd->bhds", np.asarray(dt[:, t]), Bt, xt)
+        ys[:, t] = np.einsum("bhs,bhds->bhd", Ct, h)
+    return ys, h
+
+
+@pytest.mark.parametrize("T,chunk", [(32, 8), (48, 16), (16, 16)])
+def test_ssd_chunked_matches_naive(T, chunk):
+    B_, H, hd, ds = 2, 4, 8, 16
+    key = jax.random.PRNGKey(0)
+    xh = jax.random.normal(key, (B_, T, H, hd))
+    Bc = jax.random.normal(jax.random.PRNGKey(1), (B_, T, 1, ds)) * 0.5
+    Cc = jax.random.normal(jax.random.PRNGKey(2), (B_, T, 1, ds)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(3), (B_, T, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(4), (H,)) * 0.3)
+    y, h = ssd_chunked(xh, Bc, Cc, dt, A, chunk)
+    y_ref, h_ref = naive_ssd(xh, Bc, Cc, dt, A)
+    np.testing.assert_allclose(np.asarray(y), y_ref, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), h_ref, atol=1e-4)
+
+
+def test_ssd_initial_state_continuation():
+    """Chunked scan over [a;b] == scan(a) then scan(b, h0=state(a))."""
+    B_, T, H, hd, ds, chunk = 1, 32, 2, 8, 8, 8
+    xh = jax.random.normal(jax.random.PRNGKey(0), (B_, T, H, hd))
+    Bc = jax.random.normal(jax.random.PRNGKey(1), (B_, T, 1, ds)) * 0.5
+    Cc = jax.random.normal(jax.random.PRNGKey(2), (B_, T, 1, ds)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(3), (B_, T, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(4), (H,)) * 0.3)
+    y_full, h_full = ssd_chunked(xh, Bc, Cc, dt, A, chunk)
+    y1, h1 = ssd_chunked(xh[:, :16], Bc[:, :16], Cc[:, :16], dt[:, :16], A, chunk)
+    y2, h2 = ssd_chunked(xh[:, 16:], Bc[:, 16:], Cc[:, 16:], dt[:, 16:], A,
+                         chunk, h0=h1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full), atol=1e-4)
+
+
+def test_expert_ranks_sort_matches_cumsum():
+    fe = jax.random.randint(jax.random.PRNGKey(0), (4096,), 0, 16)
+    small = moe_mod._expert_ranks(fe, 16)
+    # force the sort-based branch by lying about E via threshold arithmetic:
+    big = moe_mod._expert_ranks(jnp.concatenate([fe] * 2), 16)[:4096]
+    # independently verify small against numpy
+    fe_n = np.asarray(fe)
+    cnt, exp = {}, np.zeros_like(fe_n)
+    for i, e in enumerate(fe_n):
+        exp[i] = cnt.get(int(e), 0)
+        cnt[int(e)] = exp[i] + 1
+    np.testing.assert_array_equal(np.asarray(small), exp)
+    np.testing.assert_array_equal(np.asarray(big), exp)
+
+
+def test_expert_ranks_sort_branch_exact():
+    """Explicitly exercise the argsort path (N*E above threshold)."""
+    N, E = 1 << 19, 16    # N*E = 2^23 > 2^22 threshold
+    fe = jax.random.randint(jax.random.PRNGKey(1), (N,), 0, E)
+    ranks = moe_mod._expert_ranks(fe, E)
+    # per-expert ranks must be a permutation of 0..count-1
+    fe_n, r_n = np.asarray(fe), np.asarray(ranks)
+    for e in range(E):
+        rr = np.sort(r_n[fe_n == e])
+        np.testing.assert_array_equal(rr, np.arange(len(rr)))
+
+
+def test_moe_dropless_no_drops_and_gates_normalized(tiny_models):
+    cfg, model, params = tiny_models("deepseek-v3-671b")
+    mo = cfg.moe
+    p = params["segments"]["s1"]["moe"]
+    lp = jax.tree.map(lambda a: a[0], p)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, cfg.d_model))
+    y_drop, aux = moe_mod.moe_ffn(lp, x, mo, cfg.act, cfg.glu, dropless=True)
+    assert jnp.isfinite(y_drop).all()
+    assert float(aux) >= 0
+    # permutation invariance under dropless routing: shuffling tokens
+    # shuffles outputs identically (no capacity interference)
+    perm = jax.random.permutation(jax.random.PRNGKey(7), 16)
+    xf = x.reshape(16, cfg.d_model)
+    y2, _ = moe_mod.moe_ffn(lp, xf[perm].reshape(2, 8, -1), mo, cfg.act,
+                            cfg.glu, dropless=True)
+    np.testing.assert_allclose(np.asarray(y2.reshape(16, -1)),
+                               np.asarray(y_drop.reshape(16, -1)[perm]),
+                               atol=1e-4)
+
+
+def test_mla_step_matches_full(tiny_models):
+    """Absorbed-form decode == decompressed full attention (same prefix)."""
+    cfg, model, params = tiny_models("deepseek-v3-671b")
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)
+    x = model.embed(params, toks)
+    h_full, _, _ = model.hidden(params, x)
+    _, cache, _ = model.prefill(params, toks[:, :8], max_len=32)
+    xb = model.embed_block(params, toks[:, 8:], cache["lengths"])
+    h_blk, _, _, _ = model.step(params, xb, cache)
+    np.testing.assert_allclose(np.asarray(h_blk), np.asarray(h_full[:, 8:]),
+                               atol=2e-4)

@@ -1,0 +1,49 @@
+"""serve_step (the decode dry-run workload) is the same speculative block
+the generation engine runs: chained serve_steps must reproduce the greedy
+AR continuation exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import ARCHS, make_aux
+from repro.core import lora, spec
+
+
+@pytest.mark.parametrize("name", ["vicuna-7b", "mamba2-370m",
+                                  "llama4-scout-17b-a16e", "deepseek-v3-671b"])
+def test_chained_serve_steps_lossless(tiny_models, name):
+    cfg, model, params = tiny_models(name)
+    dvi = lora.init_draft_params(jax.random.PRNGKey(5), cfg)
+    B, Tp = 2, 8
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, Tp), 2,
+                                 cfg.vocab_size)
+    aux = make_aux(cfg, B)
+    r_ar = spec.ar_generate(model, params, prompts, 20, aux_inputs=aux)
+
+    _, cache, _ = model.prefill(params, prompts[:, :-1], aux, max_len=64)
+    pending = prompts[:, -1]
+    emitted = [[] for _ in range(B)]
+    for _ in range(8):
+        pending, commit_vec, accept, cache = spec.serve_step(
+            model, params, dvi, pending, cache)
+        for b in range(B):
+            emitted[b].extend(np.asarray(commit_vec[b, :int(accept[b])]).tolist())
+    for b in range(B):
+        ref = np.asarray(r_ar.tokens[b, Tp:int(r_ar.lengths[b])]).tolist()
+        n = min(len(ref), len(emitted[b]))
+        assert emitted[b][:n] == ref[:n], f"{name} seq {b} diverged"
+
+
+def test_serve_step_accept_range(tiny_models):
+    cfg, model, params = tiny_models("vicuna-7b")
+    dvi = lora.init_draft_params(jax.random.PRNGKey(5), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (3, 8), 2,
+                                 cfg.vocab_size)
+    _, cache, _ = model.prefill(params, prompts[:, :-1], max_len=64)
+    pending, commit_vec, accept, cache = spec.serve_step(
+        model, params, dvi, prompts[:, -1], cache)
+    K = cfg.dvi.k_spec
+    assert bool(jnp.all((accept >= 1) & (accept <= K + 1)))
+    assert commit_vec.shape == (3, K + 1)
+    assert bool(jnp.all(cache["lengths"] == 7 + accept))

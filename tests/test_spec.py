@@ -1,0 +1,104 @@
+"""The paper's core guarantees as properties.
+
+1. LOSSLESSNESS: DVI's committed stream == plain greedy AR decoding of the
+   target path, for every architecture family (incl. stateful-mixer
+   rollback and MoE dropless determinism).
+2. Buffer tuples have the accept-prefix structure (r = 1...1 then 0).
+3. MAT accounting: committed == sum over blocks of (accepted + 1).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import ARCHS, make_aux, tiny_cfg
+from repro.core import lora, spec
+from repro.models.model import build_model
+
+
+def _match(r_ar, r_sd, B, cap):
+    for b in range(B):
+        n = min(int(r_ar.lengths[b]), int(r_sd.lengths[b]), cap)
+        if not bool(jnp.all(r_ar.tokens[b, :n] == r_sd.tokens[b, :n])):
+            return False, b, n
+    return True, -1, -1
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_lossless_all_archs(tiny_models, name):
+    cfg, model, params = tiny_models(name)
+    dvi = lora.init_draft_params(jax.random.PRNGKey(5), cfg)
+    B, Tp, new = 2, 8, 20
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, Tp), 2,
+                                 cfg.vocab_size)
+    aux = make_aux(cfg, B)
+    r_ar = spec.ar_generate(model, params, prompts, new, aux_inputs=aux)
+    r_sd = spec.speculative_generate(model, params, dvi, prompts, new,
+                                     collect=True, aux_inputs=aux)
+    ok, b, n = _match(r_ar, r_sd, B, Tp + new)
+    assert ok, f"{name}: diverged for seq {b} within {n} tokens"
+
+
+@given(st.integers(0, 2 ** 16), st.integers(1, 6))
+@settings(max_examples=8, deadline=None)
+def test_lossless_property_random(seed, k_spec):
+    """Losslessness holds for random weights, seeds, and draft depths."""
+    cfg = tiny_cfg("vicuna-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed % 97))
+    dvi = lora.init_draft_params(jax.random.PRNGKey(seed % 31), cfg)
+    # perturb LoRA B so the drafter disagrees with the verifier sometimes
+    dvi = dict(dvi, B=jax.random.normal(jax.random.PRNGKey(seed), dvi["B"].shape) * 0.05)
+    prompts = jax.random.randint(jax.random.PRNGKey(seed), (2, 6), 2,
+                                 cfg.vocab_size)
+    r_ar = spec.ar_generate(model, params, prompts, 16)
+    r_sd = spec.speculative_generate(model, params, dvi, prompts, 16,
+                                     k_spec=k_spec)
+    ok, b, n = _match(r_ar, r_sd, 2, 22)
+    assert ok
+
+
+def test_buffer_reward_prefix_structure(tiny_models):
+    """Logged rewards within a block must be 1^m 0 (accepts then first
+    reject); counterfactual positions are never logged."""
+    cfg, model, params = tiny_models("vicuna-7b")
+    dvi = lora.init_draft_params(jax.random.PRNGKey(5), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (3, 8), 2,
+                                 cfg.vocab_size)
+    res = spec.speculative_generate(model, params, dvi, prompts, 24,
+                                    collect=True)
+    buf = res.buffer
+    cnt = int(buf["count"])
+    assert cnt > 0
+    pos = np.asarray(buf["pos"][:cnt])
+    rew = np.asarray(buf["reward"][:cnt])
+    assert set(np.unique(rew)) <= {0.0, 1.0}
+    # within each logged run, position index resets at 1 and rewards are a
+    # 1-prefix: a reward 1 at pos i>1 implies reward 1 at pos i-1 (same block)
+    for i in range(cnt):
+        if pos[i] > 1 and rew[i] == 1.0:
+            assert rew[i - 1] == 1.0 and pos[i - 1] == pos[i] - 1
+
+
+def test_mat_accounting(tiny_models):
+    cfg, model, params = tiny_models("vicuna-7b")
+    dvi = lora.init_draft_params(jax.random.PRNGKey(5), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 2,
+                                 cfg.vocab_size)
+    res = spec.speculative_generate(model, params, dvi, prompts, 24)
+    assert int(res.committed) == int(res.accepted_drafts) + int(res.blocks)
+    assert int(res.drafted) == cfg.dvi.k_spec * int(res.blocks)
+    mat = float(res.committed) / float(res.blocks)
+    assert 1.0 <= mat <= cfg.dvi.k_spec + 1
+
+
+def test_ar_equals_kspec0(tiny_models):
+    cfg, model, params = tiny_models("qwen3-0.6b")
+    prompts = jax.random.randint(jax.random.PRNGKey(4), (2, 8), 2,
+                                 cfg.vocab_size)
+    r1 = spec.ar_generate(model, params, prompts, 16)
+    dvi = lora.init_draft_params(jax.random.PRNGKey(5), cfg)
+    r2 = spec.speculative_generate(model, params, dvi, prompts, 16, k_spec=0)
+    assert bool(jnp.all(r1.tokens == r2.tokens))
+    assert float(r1.committed) / float(r1.blocks) == 1.0   # AR MAT == 1
