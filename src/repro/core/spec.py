@@ -19,10 +19,15 @@ runs inside ``jax.lax.while_loop``):
 
 ``k_spec=0`` degenerates to plain autoregressive decoding of the target
 path through the same code path (the AR baseline).
+
+``spec_block_step`` is the single owner of the block above; it is composed
+two ways: ``speculative_generate`` loops it inside ``jax.lax.while_loop``
+(batch decoding with tuple logging), and the continuous-batching
+``ServingEngine`` interleaves it with per-slot cache surgery (admission /
+retirement) so ragged traffic shares one persistent decode batch.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple, Optional
 
 import jax
@@ -42,6 +47,19 @@ class GenResult(NamedTuple):
     accepted_drafts: jax.Array # scalar: total accepted drafted tokens
     drafted: jax.Array         # scalar: total drafted tokens (valid blocks * K)
     buffer: Optional[dict]
+
+
+class BlockStep(NamedTuple):
+    """Result of ONE speculative block (draft K+1, verify once, commit m+1)."""
+    pending: jax.Array         # (B,) next pending token (unchanged where done)
+    commit_vec: jax.Array      # (B, K+1) committed tokens (first `accept` valid)
+    accept: jax.Array          # (B,) committed count: m+1 live, 0 where done
+    m: jax.Array               # (B,) accepted drafted tokens this block
+    cache: dict                # advanced decode cache
+    hk_blk: jax.Array          # (B, K+1, d) draft-path hiddens (tuple logging)
+    hL_blk: jax.Array          # (B, K+1, d) target-path hiddens
+    d_blk: jax.Array           # (B, K+1) drafted tokens
+    key: jax.Array             # threaded PRNG key (sampling path)
 
 
 def _restack_cands(cand_stack):
@@ -83,47 +101,33 @@ def rejection_commit(key, d_blk, dprobs, vprobs):
     return m, correction.astype(jnp.int32)
 
 
-def speculative_generate(model: Model, params: dict, dvi_params: dict,
-                         prompts: jax.Array, max_new: int,
-                         k_spec: Optional[int] = None,
-                         cache_len: Optional[int] = None,
-                         eos_id: int = 1,
-                         collect: bool = False,
-                         buf: Optional[dict] = None,
-                         aux_inputs: Optional[dict] = None,
-                         temperature: float = 0.0,
-                         key: Optional[jax.Array] = None) -> GenResult:
-    """Batched lossless speculative generation with optional tuple logging.
+def spec_block_step(model: Model, params: dict, dvi_params: dict,
+                    pending: jax.Array, cache: dict, *,
+                    k_spec: Optional[int] = None,
+                    done: Optional[jax.Array] = None,
+                    temperature: float = 0.0,
+                    key: Optional[jax.Array] = None) -> BlockStep:
+    """ONE speculative block-step against a live cache — the single owner of
+    the draft -> verify -> commit logic.  Both ``speculative_generate`` (which
+    loops it under ``jax.lax.while_loop``) and the continuous-batching serving
+    engine (which interleaves it with per-slot admission/retirement) call this.
 
-    prompts: (B, Tp) with Tp >= 2, all sequences the same length (serving
-    buckets/pads upstream — required for exact stateful-mixer prefill).
+    pending: (B,) the last committed token per sequence.  done: (B,) bool —
+    lanes marked done are masked out entirely (accept = 0, cache length and
+    stateful-mixer states unchanged, pending passed through), which is how
+    idle serving slots ride along in a fixed-size decode batch for free.
 
-    temperature == 0 (paper setting): greedy drafting + longest-prefix
-    verification.  temperature > 0 (beyond-paper): the drafter *samples*
-    and the verifier runs Leviathan-style rejection sampling — the emitted
-    stream is distributed exactly as target-model sampling."""
+    temperature == 0: greedy drafting + longest-agreeing-prefix verification.
+    temperature > 0: the drafter samples and the verifier runs Leviathan-style
+    rejection sampling (lossless w.r.t. target-model sampling)."""
     cfg = model.cfg
     K = cfg.dvi.k_spec if k_spec is None else k_spec
-    k = cfg.dvi.split_layer
-    L = cfg.num_layers
-    B, Tp = prompts.shape
+    k, L = cfg.dvi.split_layer, cfg.num_layers
+    B = pending.shape[0]
     sampling = temperature > 0.0
     key = key if key is not None else jax.random.PRNGKey(0)
-    assert Tp >= 2, "need at least 2 prompt tokens (one prefill + one pending)"
-    total = Tp + max_new + K + 2
-    cache_cap = cache_len or (total + tfm.RING_SLACK)
-
-    # ---- prefill all but the last prompt token; it becomes `pending` ----
-    _, cache, _ = model.prefill(params, prompts[:, :Tp - 1], aux_inputs,
-                                max_len=cache_cap)
-    pending = prompts[:, Tp - 1]
-    out = jnp.zeros((B, total), jnp.int32).at[:, :Tp].set(prompts)
-    out_len = jnp.full((B,), Tp, jnp.int32)
-    done = jnp.zeros((B,), bool)
-    if collect and buf is None:
-        buf = buffer_mod.init_buffer(cfg)
-    stats = {k_: jnp.int32(0) for k_ in
-             ("blocks", "committed", "accepted_drafts", "drafted")}
+    done = jnp.zeros((B,), bool) if done is None else done
+    t0 = cache["lengths"]
 
     def draft_iter(carry, _):
         cache_c, pend, k_ = carry
@@ -141,76 +145,137 @@ def speculative_generate(model: Model, params: dict, dvi_params: dict,
                                   jnp.ones((B,), jnp.int32))
         return (cache3, d_tok, k_), (h_k[:, 0], d_tok, dprobs, cands)
 
+    (cache_d, _, key), (hk_s, d_s, dp_s, cand_stack) = jax.lax.scan(
+        draft_iter, (cache, pending, key), None, length=K + 1)
+    hk_blk = jnp.moveaxis(hk_s, 0, 1)                   # (B, K+1, d)
+    d_blk = jnp.moveaxis(d_s, 0, 1)                     # (B, K+1)
+
+    # ---- verify: one deep pass over the h_k block ----
+    cache_v = dict(cache_d, lengths=t0)
+    h_L_blk, cache_v2, deep_cands, _ = model.step(params, hk_blk, cache_v, k, L)
+    vlogits = model.logits(params, h_L_blk)
+    y_star = jnp.argmax(vlogits, axis=-1).astype(jnp.int32)       # (B, K+1)
+
+    if sampling:
+        key, sub = jax.random.split(key)
+        vprobs = jax.nn.softmax(vlogits / temperature, axis=-1)
+        dprobs = jnp.moveaxis(dp_s, 0, 1)               # (B, K+1, V)
+        m, correction = rejection_commit(sub, d_blk, dprobs, vprobs)
+    else:
+        matches = (d_blk[:, :K] == y_star[:, :K])
+        m = jnp.sum(jnp.cumprod(matches.astype(jnp.int32), axis=1), axis=1)
+        correction = None
+    accept = jnp.where(done, 0, m + 1)                  # (B,)
+
+    all_cands = dict(_restack_cands(cand_stack), **deep_cands)
+    cache_new = tfm.commit_cache(cfg, cache_v2, all_cands, accept)
+
+    # ---- commit tokens ----
+    ar = jnp.arange(K + 1)
+    y_at_m = correction if sampling else \
+        jnp.take_along_axis(y_star, m[:, None], axis=1)[:, 0]
+    commit_vec = jnp.where(ar[None, :] < m[:, None], d_blk, y_at_m[:, None])
+    new_pending = jnp.where(done, pending, y_at_m)
+    return BlockStep(new_pending, commit_vec, accept, m, cache_new,
+                     hk_blk, h_L_blk, d_blk, key)
+
+
+def log_block_tuples(cfg, buf: dict, step: BlockStep, prev_pending: jax.Array,
+                     done: jax.Array, k_spec: Optional[int] = None) -> dict:
+    """Append one block's accept/reject tuples to the replay buffer: drafted
+    positions 1..K up to and including the first reject; lanes marked `done`
+    (finished sequences, idle serving slots, padded lanes) are excluded."""
+    K = cfg.dvi.k_spec if k_spec is None else k_spec
+    if K == 0:
+        return buf
+    B = step.d_blk.shape[0]
+    d = cfg.d_model
+    i_idx = jnp.arange(1, K + 1)                        # (K,)
+    valid = (~done)[:, None] & (i_idx[None, :]
+                                <= jnp.minimum(step.m + 1, K)[:, None])
+    reward = (i_idx[None, :] <= step.m[:, None]).astype(jnp.float32)
+    prev = jnp.concatenate([prev_pending[:, None], step.d_blk[:, :K - 1]],
+                           axis=1) if K > 1 else prev_pending[:, None]
+    return buffer_mod.add_block(
+        buf,
+        step.hk_blk[:, :K].reshape(B * K, d),
+        step.hL_blk[:, :K].reshape(B * K, d),
+        step.d_blk[:, :K].reshape(B * K),
+        reward.reshape(B * K),
+        jnp.broadcast_to(i_idx[None], (B, K)).reshape(B * K),
+        prev.reshape(B * K),
+        valid.reshape(B * K))
+
+
+def speculative_generate(model: Model, params: dict, dvi_params: dict,
+                         prompts: jax.Array, max_new: int,
+                         k_spec: Optional[int] = None,
+                         cache_len: Optional[int] = None,
+                         eos_id: int = 1,
+                         collect: bool = False,
+                         buf: Optional[dict] = None,
+                         aux_inputs: Optional[dict] = None,
+                         temperature: float = 0.0,
+                         key: Optional[jax.Array] = None,
+                         live_mask: Optional[jax.Array] = None) -> GenResult:
+    """Batched lossless speculative generation with optional tuple logging.
+
+    prompts: (B, Tp) with Tp >= 2, all sequences the same length (serving
+    buckets/pads upstream — required for exact stateful-mixer prefill).
+
+    temperature == 0 (paper setting): greedy drafting + longest-prefix
+    verification.  temperature > 0 (beyond-paper): the drafter *samples*
+    and the verifier runs Leviathan-style rejection sampling — the emitted
+    stream is distributed exactly as target-model sampling.
+
+    live_mask: (B,) bool — lanes marked False (e.g. batch-padding duplicates
+    in the sync serving path) generate nothing, log no tuples, and count in
+    no statistics."""
+    cfg = model.cfg
+    K = cfg.dvi.k_spec if k_spec is None else k_spec
+    B, Tp = prompts.shape
+    key = key if key is not None else jax.random.PRNGKey(0)
+    assert Tp >= 2, "need at least 2 prompt tokens (one prefill + one pending)"
+    total = Tp + max_new + K + 2
+    cache_cap = cache_len or (total + tfm.RING_SLACK)
+
+    # ---- prefill all but the last prompt token; it becomes `pending` ----
+    _, cache, _ = model.prefill(params, prompts[:, :Tp - 1], aux_inputs,
+                                max_len=cache_cap)
+    pending = prompts[:, Tp - 1]
+    out = jnp.zeros((B, total), jnp.int32).at[:, :Tp].set(prompts)
+    out_len = jnp.full((B,), Tp, jnp.int32)
+    done = jnp.zeros((B,), bool) if live_mask is None else ~live_mask
+    if collect and buf is None:
+        buf = buffer_mod.init_buffer(cfg)
+    stats = {k_: jnp.int32(0) for k_ in
+             ("blocks", "committed", "accepted_drafts", "drafted")}
+
     def body(carry):
         out, out_len, pending, done, cache, buf, stats, key = carry
-        t0 = cache["lengths"]
-
-        (cache_d, _, key), (hk_s, d_s, dp_s, cand_stack) = jax.lax.scan(
-            draft_iter, (cache, pending, key), None, length=K + 1)
-        hk_blk = jnp.moveaxis(hk_s, 0, 1)               # (B, K+1, d)
-        d_blk = jnp.moveaxis(d_s, 0, 1)                 # (B, K+1)
-
-        # ---- verify: one deep pass over the h_k block ----
-        cache_v = dict(cache_d, lengths=t0)
-        h_L_blk, cache_v2, deep_cands, _ = model.step(params, hk_blk, cache_v, k, L)
-        vlogits = model.logits(params, h_L_blk)
-        y_star = jnp.argmax(vlogits, axis=-1).astype(jnp.int32)   # (B, K+1)
-
-        if sampling:
-            key, sub = jax.random.split(key)
-            vprobs = jax.nn.softmax(vlogits / temperature, axis=-1)
-            dprobs = jnp.moveaxis(dp_s, 0, 1)           # (B, K+1, V)
-            m, correction = rejection_commit(sub, d_blk, dprobs, vprobs)
-        else:
-            matches = (d_blk[:, :K] == y_star[:, :K])
-            m = jnp.sum(jnp.cumprod(matches.astype(jnp.int32), axis=1), axis=1)
-            correction = None
-        accept = jnp.where(done, 0, m + 1)              # (B,)
-
-        all_cands = dict(_restack_cands(cand_stack), **deep_cands)
-        cache_new = tfm.commit_cache(cfg, cache_v2, all_cands, accept)
-
-        # ---- commit tokens ----
-        ar = jnp.arange(K + 1)
-        y_at_m = correction if sampling else \
-            jnp.take_along_axis(y_star, m[:, None], axis=1)[:, 0]
-        commit_vec = jnp.where(ar[None, :] < m[:, None], d_blk, y_at_m[:, None])
+        blk = spec_block_step(model, params, dvi_params, pending, cache,
+                              k_spec=K, done=done, temperature=temperature,
+                              key=key)
         out = jax.vmap(lambda o, cv, s: jax.lax.dynamic_update_slice(o, cv, (s,)))(
-            out, commit_vec, out_len)
-        emitted_eos = jnp.any((ar[None, :] < accept[:, None])
-                              & (commit_vec == eos_id), axis=1)
-        out_len = out_len + accept
+            out, blk.commit_vec, out_len)
+        ar = jnp.arange(K + 1)
+        emitted_eos = jnp.any((ar[None, :] < blk.accept[:, None])
+                              & (blk.commit_vec == eos_id), axis=1)
+        out_len = out_len + blk.accept
         new_done = done | emitted_eos | (out_len >= Tp + max_new)
-        new_pending = jnp.where(done, pending, y_at_m)
 
-        # ---- log tuples (drafted positions 1..K up to first reject) ----
         if collect:
-            i_idx = jnp.arange(1, K + 1)                        # (K,)
-            valid = (~done)[:, None] & (i_idx[None, :]
-                                        <= jnp.minimum(m + 1, K)[:, None])
-            reward = (i_idx[None, :] <= m[:, None]).astype(jnp.float32)
-            prev = jnp.concatenate([pending[:, None], d_blk[:, :K - 1]], axis=1) \
-                if K > 1 else pending[:, None]
-            d = cfg.d_model
-            buf = buffer_mod.add_block(
-                buf,
-                hk_blk[:, :K].reshape(B * K, d),
-                h_L_blk[:, :K].reshape(B * K, d),
-                d_blk[:, :K].reshape(B * K),
-                reward.reshape(B * K),
-                jnp.broadcast_to(i_idx[None], (B, K)).reshape(B * K),
-                prev.reshape(B * K),
-                valid.reshape(B * K))
+            buf = log_block_tuples(cfg, buf, blk, pending, done, k_spec=K)
 
         live = (~done).astype(jnp.int32)
         stats2 = {
             "blocks": stats["blocks"] + live.sum(),
-            "committed": stats["committed"] + accept.sum(),
-            "accepted_drafts": stats["accepted_drafts"] + (m * live).sum(),
+            "committed": stats["committed"] + blk.accept.sum(),
+            "accepted_drafts": stats["accepted_drafts"] + (blk.m * live).sum(),
             "drafted": stats["drafted"] + K * live.sum(),
         }
-        return (out, out_len, new_pending, new_done, cache_new, buf, stats2,
-                key)
+        return (out, out_len, blk.pending, new_done, blk.cache, buf, stats2,
+                blk.key)
 
     def cond(carry):
         done = carry[3]
@@ -233,37 +298,10 @@ def ar_generate(model: Model, params: dict, prompts, max_new, **kw):
 
 def serve_step(model: Model, params: dict, dvi_params: dict, pending,
                cache, k_spec: Optional[int] = None):
-    """ONE speculative step against an existing cache — the unit the decode
-    dry-run shapes lower (decode_32k / long_500k): draft K, verify once,
-    commit m+1.  Returns (new_pending, commit_vec, accept, new_cache)."""
-    cfg = model.cfg
-    K = cfg.dvi.k_spec if k_spec is None else k_spec
-    k, L = cfg.dvi.split_layer, cfg.num_layers
-    B = pending.shape[0]
-    t0 = cache["lengths"]
-
-    def draft_iter(carry, _):
-        cache_c, pend = carry
-        x = model.embed_block(params, pend[:, None], cache_c["lengths"])
-        h_k, cache2, cands, _ = model.step(params, x, cache_c, 0, k)
-        dlog = draft_logits(model, params, dvi_params, h_k[:, 0])
-        d_tok = jnp.argmax(dlog, axis=-1).astype(jnp.int32)
-        cache3 = tfm.commit_cache(cfg, cache2, cands, jnp.ones((B,), jnp.int32))
-        return (cache3, d_tok), (h_k[:, 0], d_tok, cands)
-
-    (cache_d, _), (hk_s, d_s, cand_stack) = jax.lax.scan(
-        draft_iter, (cache, pending), None, length=K + 1)
-    hk_blk = jnp.moveaxis(hk_s, 0, 1)
-    d_blk = jnp.moveaxis(d_s, 0, 1)
-    cache_v = dict(cache_d, lengths=t0)
-    h_L_blk, cache_v2, deep_cands, _ = model.step(params, hk_blk, cache_v, k, L)
-    y_star = jnp.argmax(model.logits(params, h_L_blk), axis=-1).astype(jnp.int32)
-    matches = (d_blk[:, :K] == y_star[:, :K])
-    m = jnp.sum(jnp.cumprod(matches.astype(jnp.int32), axis=1), axis=1)
-    accept = m + 1
-    all_cands = dict(_restack_cands(cand_stack), **deep_cands)
-    cache_new = tfm.commit_cache(cfg, cache_v2, all_cands, accept)
-    ar = jnp.arange(K + 1)
-    y_at_m = jnp.take_along_axis(y_star, m[:, None], axis=1)[:, 0]
-    commit_vec = jnp.where(ar[None, :] < m[:, None], d_blk, y_at_m[:, None])
-    return y_at_m, commit_vec, accept, cache_new
+    """ONE greedy speculative step against an existing cache — the unit the
+    decode dry-run shapes lower (decode_32k / long_500k).  Thin compatibility
+    wrapper over ``spec_block_step`` (the single draft/verify/commit owner).
+    Returns (new_pending, commit_vec, accept, new_cache)."""
+    blk = spec_block_step(model, params, dvi_params, pending, cache,
+                          k_spec=k_spec)
+    return blk.pending, blk.commit_vec, blk.accept, blk.cache

@@ -17,6 +17,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.5+ renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _kernel(h_ref, w_ref, a_ref, b_ref, out_ref, u_ref, *, gamma: float):
     j = pl.program_id(1)
@@ -60,7 +63,7 @@ def lora_logits(h: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
         out_specs=pl.BlockSpec((bt, bv), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Tp, Vp), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bt, r), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(h, w, a, b)

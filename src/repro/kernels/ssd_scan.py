@@ -20,6 +20,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.5+ renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, y_ref, hout_ref, hstate_ref,
             *, Q: int):
@@ -94,7 +97,7 @@ def ssd_scan(xh: jax.Array, Bc: jax.Array, Cc: jax.Array, dt: jax.Array,
             jax.ShapeDtypeStruct((B, H, hd, ds), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((H, hd, ds), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(xh, Bc2, Cc2, dt, A)

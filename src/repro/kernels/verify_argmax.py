@@ -19,6 +19,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.5+ renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 NEG = -1e30
 
 
@@ -72,7 +75,7 @@ def verify_argmax(h: jax.Array, w: jax.Array, *, block_t: int = 128,
             jax.ShapeDtypeStruct((Tp,), jnp.int32),
             jax.ShapeDtypeStruct((Tp,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(h, w)

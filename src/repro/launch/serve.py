@@ -1,11 +1,19 @@
 """Serving launcher: continual-learning speculative serving demo.
 
 Streams synthetic requests (optionally with a mid-run task-distribution
-shift) through the ServingEngine and reports acceptance / MAT / wall-time —
+shift) through the ServingEngine and reports acceptance / MAT / latency —
 the paper's deployment story end-to-end on CPU with a tiny backbone.
 
+Two schedulers (``--scheduler``):
+
+* ``continuous`` (default) — slot-based continuous batching: ``--num-slots``
+  lanes over one persistent cache, per-request prefill-on-arrival and
+  per-request retirement, drafter updates on a block-step cadence.
+* ``sync`` — legacy batch-synchronous path (bucket, pad, decode the whole
+  batch to completion) for comparison.
+
   PYTHONPATH=src python -m repro.launch.serve --arch vicuna-7b --tiny \\
-      --requests 64 --shift-at 32
+      --requests 64 --shift-at 32 --scheduler continuous --num-slots 8
 """
 from __future__ import annotations
 
@@ -29,6 +37,10 @@ def main():
     ap.add_argument("--tiny", action="store_true")
     ap.add_argument("--requests", type=int, default=48)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--scheduler", choices=("sync", "continuous"),
+                    default="continuous")
+    ap.add_argument("--num-slots", type=int, default=8,
+                    help="decode lanes for the continuous scheduler")
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--shift-at", type=int, default=0,
@@ -46,7 +58,8 @@ def main():
                          tasks.stream(TASK_CATEGORIES, args.pretrain_steps,
                                       8, 32, seed=args.seed + 1), lr=2e-3)
     state = online_mod.init_trainer(model, jax.random.PRNGKey(args.seed + 7))
-    eng = ServingEngine(model, params, state, batch_size=args.batch,
+    eng = ServingEngine(model, params, state, scheduler=args.scheduler,
+                        num_slots=args.num_slots, batch_size=args.batch,
                         max_new=args.max_new, learn=not args.no_learn,
                         buckets=(args.prompt_len,))
     t0 = time.time()
@@ -56,15 +69,17 @@ def main():
         prompt = tasks.sample(cat, 1, args.prompt_len, seed=1000 + i)[0]
         eng.submit(Request(uid=i, prompt=prompt, max_new=args.max_new))
         if (i + 1) % args.batch == 0:
-            before = eng.acceptance
             done.extend(eng.step())
+            mat = done[-1].mat if done else 0.0
             print(f"[serve] {i+1:4d} reqs  acceptance={eng.acceptance:.3f} "
-                  f"MAT={done[-1].mat:.2f}  updates={eng.stats['updates']}")
+                  f"MAT={mat:.2f}  updates={eng.stats['updates']}")
     done.extend(eng.run())
     dt = time.time() - t0
     toks = sum(len(c.gen_tokens) for c in done)
+    lat = eng.latency_percentiles()
     print(f"[serve] {len(done)} completions, {toks} gen tokens in {dt:.1f}s "
-          f"({toks/dt:.1f} tok/s); final acceptance={eng.acceptance:.3f}")
+          f"({toks/dt:.1f} tok/s); final acceptance={eng.acceptance:.3f}; "
+          f"latency p50={lat['p50_s']:.2f}s p95={lat['p95_s']:.2f}s")
 
 
 if __name__ == "__main__":

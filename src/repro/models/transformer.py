@@ -562,6 +562,55 @@ def fill_cache_from_full(cfg: ModelConfig, cache: dict, contribs: dict,
     return {"lengths": jnp.full((B,), T, jnp.int32), "segs": new_segs}
 
 
+def _slot_axis(leaf_name: str) -> int:
+    """Batch axis of a per-segment cache leaf: `pos` maps (B, C); everything
+    else is layer-stacked (n, B, ...)."""
+    return 0 if leaf_name == "pos" else 1
+
+
+def insert_slot(cfg: ModelConfig, cache: dict, src: dict, slot,
+                src_slot: int = 0) -> dict:
+    """Continuous-batching cache surgery: copy sequence lane `src_slot` of
+    cache `src` (e.g. a freshly prefilled B=1 cache) into lane `slot` of a
+    live batched cache.  All leaves — attention KV (ring or full), quant
+    scales, slot positions, cross-attention KV, and stateful-mixer conv/state
+    — must share capacities with `cache`; only the batch lane differs.
+    `slot` may be a traced scalar, so admission jits once per prompt shape."""
+    new_segs = {}
+    for name, seg_c in cache["segs"].items():
+        src_c = src["segs"][name]
+        out = {}
+        for kname, leaf in seg_c.items():
+            ax = _slot_axis(kname)
+            piece = jax.lax.dynamic_slice_in_dim(src_c[kname], src_slot, 1, ax)
+            out[kname] = jax.lax.dynamic_update_slice_in_dim(
+                leaf, piece.astype(leaf.dtype), slot, ax)
+        new_segs[name] = out
+    ln = jax.lax.dynamic_slice_in_dim(src["lengths"], src_slot, 1, 0)
+    lengths = jax.lax.dynamic_update_slice_in_dim(cache["lengths"], ln, slot, 0)
+    return {"lengths": lengths, "segs": new_segs}
+
+
+def reset_slot(cfg: ModelConfig, cache: dict, slot) -> dict:
+    """Evict sequence lane `slot`: length 0, attention slots emptied
+    (pos = -1), KV and stateful-mixer states zeroed — an inert lane that a
+    later ``insert_slot`` can reuse.  Other lanes are untouched bit-for-bit."""
+    new_segs = {}
+    for name, seg_c in cache["segs"].items():
+        out = {}
+        for kname, leaf in seg_c.items():
+            ax = _slot_axis(kname)
+            shape = leaf.shape[:ax] + (1,) + leaf.shape[ax + 1:]
+            fill = -1 if kname == "pos" else 0
+            piece = jnp.full(shape, fill, leaf.dtype)
+            out[kname] = jax.lax.dynamic_update_slice_in_dim(leaf, piece,
+                                                             slot, ax)
+        new_segs[name] = out
+    lengths = jax.lax.dynamic_update_slice_in_dim(
+        cache["lengths"], jnp.zeros((1,), jnp.int32), slot, 0)
+    return {"lengths": lengths, "segs": new_segs}
+
+
 def commit_cache(cfg: ModelConfig, cache: dict, cands: dict,
                  accept: jax.Array) -> dict:
     """Advance the cache by `accept` (B,) committed tokens; select stateful

@@ -1,20 +1,32 @@
-"""Continual-learning serving engine: batched requests + DVI online updates.
+"""Continual-learning serving engine: slot-scheduled continuous batching.
 
-The paper's deployment story: a single model serves traffic with lossless
-speculative speedup, and every verification step doubles as training signal
-for the drafter — the engine below is that loop made concrete:
+The paper's deployment story — one model serving live traffic while every
+verify step trains the drafter — implemented as a **slot scheduler** around
+the shared speculative block-step (``spec_block_step``):
 
-  1. requests are bucketed by prompt length (stateful mixers need packed
-     equal-length prefill; buckets pad up to a small set of lengths),
-  2. each batch is decoded with ``speculative_generate(collect=True)``,
-  3. after each batch, the LoRA drafter takes `updates_per_batch` small
-     AdamW steps from the replay buffer (KL->RL schedule),
-  4. acceptance statistics are tracked so drift is observable
-     (falling acceptance on new traffic recovers as the drafter adapts).
+* the decode batch is a fixed set of ``num_slots`` lanes over one persistent
+  cache; each lane independently holds a request at its own committed length,
+* arriving requests are prefilled individually (exact prompt, no bucket
+  padding) and spliced into a free lane with ``transformer.insert_slot``,
+* every engine tick runs ONE speculative block across all lanes; idle lanes
+  ride along masked ``done`` (accept = 0, no state change, no tuples logged),
+* lanes retire per-request on EOS or ``max_new`` — completions stream out as
+  they finish instead of waiting for the whole batch (no head-of-line
+  blocking) — and the lane is reset (``transformer.reset_slot``) for reuse,
+* the LoRA drafter takes an update every ``update_every`` block-steps from
+  the replay buffer, decoupled from request boundaries,
+* per-request latency (arrival -> completion; see ``latency_percentiles``)
+  and per-slot acceptance are tracked so drift and stragglers are observable.
+
+``scheduler="sync"`` keeps the legacy batch-synchronous path (bucket by
+prompt length, decode a whole batch to completion with
+``speculative_generate``) for comparison — ``benchmarks/serving_bench.py``
+races the two on the same Poisson arrival trace.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -24,6 +36,7 @@ import numpy as np
 
 from repro.core import online as online_mod
 from repro.core import spec as spec_mod
+from repro.models import transformer as tfm
 from repro.models.model import Model
 
 
@@ -37,10 +50,22 @@ class Request:
 @dataclass
 class Completion:
     uid: int
-    tokens: np.ndarray
-    gen_tokens: np.ndarray
-    mat: float
-    wall_s: float
+    tokens: np.ndarray            # full stream (prompt + generated)
+    gen_tokens: np.ndarray        # generated tokens only
+    mat: float                    # mean accepted tokens/block for this request
+    wall_s: float                 # engine time attributed to this request
+    latency_s: float = 0.0        # submit -> completion wall time
+
+
+@dataclass
+class _Slot:
+    """Host-side bookkeeping for one live lane of the decode batch."""
+    uid: int
+    prompt: np.ndarray
+    max_new: int
+    gen: List[int] = field(default_factory=list)
+    blocks: int = 0
+    wall_s: float = 0.0
 
 
 @dataclass
@@ -48,23 +73,75 @@ class ServingEngine:
     model: Model
     params: dict
     state: online_mod.OnlineTrainerState
-    batch_size: int = 8
-    max_new: int = 64
+    scheduler: str = "sync"       # "sync" (legacy batch) | "continuous"
+    num_slots: int = 8            # continuous: lanes in the decode batch
+    batch_size: int = 8           # sync: requests per batch
+    max_new: int = 64             # default / cap for generation length
     buckets: tuple = (16, 32, 64, 128)
-    updates_per_batch: int = 1
+    updates_per_batch: int = 1    # sync: drafter updates after each batch
+    update_every: int = 4         # continuous: blocks between drafter updates
     learn: bool = True
     lr: float = 1e-3
     mode: str = "full"
+    eos_id: int = 1
+    cache_len: int = 0            # continuous cache capacity (0 = derive)
     _queue: Dict[int, List[Request]] = field(default_factory=dict)
-    _gen_cache: dict = field(default_factory=dict)
+    _fifo: deque = field(default_factory=deque)
     stats: dict = field(default_factory=lambda: {
         "requests": 0, "blocks": 0, "committed": 0, "accepted": 0,
-        "drafted": 0, "updates": 0})
+        "drafted": 0, "updates": 0, "latencies": []})
 
     def __post_init__(self):
+        model, cfg = self.model, self.model.cfg
+        K = cfg.dvi.k_spec
+        self._cap = self.cache_len or (max(self.buckets) + self.max_new
+                                       + K + 2 + tfm.RING_SLACK)
         self._update_fn = online_mod.make_update_fn(self.model, self.mode,
                                                     self.lr)
         self._key = jax.random.PRNGKey(1234)
+
+        # continuous state: one persistent cache, host-side slot table
+        self._slots: List[Optional[_Slot]] = [None] * self.num_slots
+        self._done = np.ones((self.num_slots,), bool)
+        self._pending = jnp.zeros((self.num_slots,), jnp.int32)
+        self._cache: Optional[dict] = None
+        self._slot_accepted = np.zeros((self.num_slots,), np.int64)
+        self._slot_drafted = np.zeros((self.num_slots,), np.int64)
+        self._submit_t: Dict[int, float] = {}
+        self._blocks_since_update = 0
+
+        # ONE jitted generation entry point (jit shape-specializes on
+        # `prompts`, so per-bucket closure caching was pure duplication);
+        # max_new is threaded as a static arg, not a Python closure.
+        def gen(params, dvi_params, prompts, buf, live, max_new):
+            return spec_mod.speculative_generate(
+                model, params, dvi_params, prompts, max_new,
+                collect=True, buf=buf, live_mask=live)
+        self._gen = jax.jit(gen, static_argnums=(5,))
+
+        def block(params, dvi_params, pending, cache, buf, done):
+            blk = spec_mod.spec_block_step(model, params, dvi_params,
+                                           pending, cache, done=done)
+            buf = spec_mod.log_block_tuples(cfg, buf, blk, pending, done)
+            return blk.pending, blk.commit_vec, blk.accept, blk.m, blk.cache, buf
+        self._block = jax.jit(block)
+
+        cap = self._cap
+
+        def admit(params, cache, pending, prompt, slot):
+            _, pc, _ = model.prefill(params, prompt[None, :-1], max_len=cap)
+            cache = tfm.insert_slot(cfg, cache, pc, slot)
+            pending = jax.lax.dynamic_update_slice_in_dim(
+                pending, prompt[-1:], slot, 0)
+            return pending, cache
+        self._admit_fn = jax.jit(admit)
+
+        self._reset_fn = jax.jit(
+            lambda cache, slot: tfm.reset_slot(cfg, cache, slot))
+
+    # ------------------------------------------------------------------
+    # submission
+    # ------------------------------------------------------------------
 
     def _bucket(self, n: int) -> int:
         for b in self.buckets:
@@ -73,20 +150,12 @@ class ServingEngine:
         return self.buckets[-1]
 
     def submit(self, req: Request) -> None:
-        b = self._bucket(len(req.prompt))
-        self._queue.setdefault(b, []).append(req)
-
-    def _gen_fn(self, bucket: int):
-        if bucket not in self._gen_cache:
-            model, max_new = self.model, self.max_new
-
-            @jax.jit
-            def gen(params, dvi_params, prompts, buf):
-                return spec_mod.speculative_generate(
-                    model, params, dvi_params, prompts, max_new,
-                    collect=True, buf=buf)
-            self._gen_cache[bucket] = gen
-        return self._gen_cache[bucket]
+        self._submit_t[req.uid] = time.perf_counter()
+        if self.scheduler == "continuous":
+            self._fifo.append(req)
+        else:
+            b = self._bucket(len(req.prompt))
+            self._queue.setdefault(b, []).append(req)
 
     def _pad(self, req: Request, bucket: int) -> np.ndarray:
         p = req.prompt[-bucket:]
@@ -94,63 +163,211 @@ class ServingEngine:
             p = np.concatenate([np.full(bucket - len(p), p[0], p.dtype), p])
         return p
 
-    def step(self) -> List[Completion]:
+    # ------------------------------------------------------------------
+    # drafter updates (shared)
+    # ------------------------------------------------------------------
+
+    def _drafter_update(self, n: int) -> None:
+        for _ in range(n):
+            self._key, sub = jax.random.split(self._key)
+            (self.state.dvi_params, self.state.opt_state,
+             self.state.baseline, _m) = self._update_fn(
+                self.params, self.state.dvi_params, self.state.opt_state,
+                self.state.buf, self.state.baseline, self.state.step, sub)
+            self.state.step = self.state.step + 1
+            self.stats["updates"] += 1
+
+    def _complete(self, uid: int, tokens: np.ndarray, gen_tokens: np.ndarray,
+                  mat: float, wall_s: float) -> Completion:
+        lat = time.perf_counter() - self._submit_t.pop(uid, time.perf_counter())
+        self.stats["latencies"].append(lat)
+        return Completion(uid=uid, tokens=tokens, gen_tokens=gen_tokens,
+                          mat=mat, wall_s=wall_s, latency_s=lat)
+
+    # ------------------------------------------------------------------
+    # sync scheduler (legacy batch path)
+    # ------------------------------------------------------------------
+
+    def _step_sync(self) -> List[Completion]:
         """Serve one batch from the fullest bucket; maybe update the drafter."""
         if not any(self._queue.values()):
             return []
         bucket = max(self._queue, key=lambda b: len(self._queue[b]))
         reqs = self._queue[bucket][:self.batch_size]
         self._queue[bucket] = self._queue[bucket][self.batch_size:]
+        n_real = len(reqs)
         while len(reqs) < self.batch_size:       # pad batch with replays
             reqs.append(reqs[-1])
+        # padded lanes are masked out of generation, tuple logging, and stats
+        live = jnp.arange(self.batch_size) < n_real
         prompts = jnp.asarray(np.stack([self._pad(r, bucket) for r in reqs]))
 
         t0 = time.perf_counter()
-        res = self._gen_fn(bucket)(self.params, self.state.dvi_params,
-                                   prompts, self.state.buf)
+        res = self._gen(self.params, self.state.dvi_params, prompts,
+                        self.state.buf, live, int(self.max_new))
         jax.block_until_ready(res.tokens)
         wall = time.perf_counter() - t0
         self.state.buf = res.buffer
 
         if self.learn:
-            for _ in range(self.updates_per_batch):
-                self._key, sub = jax.random.split(self._key)
-                (self.state.dvi_params, self.state.opt_state,
-                 self.state.baseline, _m) = self._update_fn(
-                    self.params, self.state.dvi_params, self.state.opt_state,
-                    self.state.buf, self.state.baseline, self.state.step, sub)
-                self.state.step = self.state.step + 1
-                self.stats["updates"] += 1
+            self._drafter_update(self.updates_per_batch)
 
         mat = float(res.committed) / max(float(res.blocks), 1.0)
-        self.stats["requests"] += len(set(r.uid for r in reqs))
+        self.stats["requests"] += n_real
         self.stats["blocks"] += int(res.blocks)
         self.stats["committed"] += int(res.committed)
         self.stats["accepted"] += int(res.accepted_drafts)
         self.stats["drafted"] += int(res.drafted)
 
-        outs, seen = [], set()
+        outs = []
         toks = np.asarray(res.tokens)
         lens = np.asarray(res.lengths)
-        for i, r in enumerate(reqs):
-            if r.uid in seen:
-                continue
-            seen.add(r.uid)
-            outs.append(Completion(
-                uid=r.uid, tokens=toks[i, :lens[i]],
-                gen_tokens=toks[i, bucket:lens[i]],
-                mat=mat, wall_s=wall / len(reqs)))
+        for i, r in enumerate(reqs[:n_real]):
+            # the batch decodes to the engine-wide max_new (head-of-line cost
+            # of sync scheduling) but the client only gets what it asked for
+            gen = toks[i, bucket:lens[i]][:min(r.max_new, self.max_new)]
+            outs.append(self._complete(
+                r.uid, np.concatenate([toks[i, :bucket], gen]), gen,
+                mat, wall / n_real))
         return outs
+
+    # ------------------------------------------------------------------
+    # continuous scheduler (slot-based)
+    # ------------------------------------------------------------------
+
+    @property
+    def active_slots(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    def _admit_waiting(self) -> None:
+        """Prefill-on-arrival: splice queued requests into free lanes."""
+        cfg = self.model.cfg
+        while self._fifo and not all(s is not None for s in self._slots):
+            slot = next(i for i, s in enumerate(self._slots) if s is None)
+            req = self._fifo.popleft()
+            prompt = np.asarray(req.prompt, np.int32)
+            if len(prompt) < 2:                  # need prefill + pending
+                prompt = np.concatenate(
+                    [np.full(2 - len(prompt), prompt[0], np.int32), prompt])
+            max_new = min(req.max_new, self.max_new)
+            # oversized prompts keep their suffix (mirrors the sync path's
+            # `_pad` truncation) rather than crashing the serving loop
+            limit = self._cap - max_new - cfg.dvi.k_spec - 2
+            if len(prompt) > limit:
+                prompt = prompt[-limit:]
+            if self._cache is None:
+                self._cache = self.model.init_cache(self.num_slots, self._cap)
+            self._pending, self._cache = self._admit_fn(
+                self.params, self._cache, self._pending,
+                jnp.asarray(prompt), jnp.int32(slot))
+            self._slots[slot] = _Slot(uid=req.uid, prompt=prompt,
+                                      max_new=max_new)
+            self._done[slot] = False
+
+    def _step_continuous(self) -> List[Completion]:
+        """One tick: admit arrivals, run ONE speculative block across all
+        lanes, retire finished lanes, maybe update the drafter."""
+        self._admit_waiting()
+        if self.active_slots == 0:
+            return []
+        K = self.model.cfg.dvi.k_spec
+        done = jnp.asarray(self._done)
+        t0 = time.perf_counter()
+        (self._pending, commit_vec, accept, m, self._cache,
+         self.state.buf) = self._block(self.params, self.state.dvi_params,
+                                       self._pending, self._cache,
+                                       self.state.buf, done)
+        jax.block_until_ready(commit_vec)
+        wall = time.perf_counter() - t0
+        wall_each = wall / self.active_slots
+        commit_np = np.asarray(commit_vec)
+        acc_np = np.asarray(accept)
+        m_np = np.asarray(m)
+
+        outs: List[Completion] = []
+        for s, st in enumerate(self._slots):
+            if st is None:
+                continue
+            st.blocks += 1
+            st.wall_s += wall_each
+            self.stats["blocks"] += 1
+            self.stats["committed"] += int(acc_np[s])
+            self.stats["accepted"] += int(m_np[s])
+            self.stats["drafted"] += K
+            self._slot_accepted[s] += int(m_np[s])
+            self._slot_drafted[s] += K
+            for t in commit_np[s, :int(acc_np[s])]:
+                if len(st.gen) >= st.max_new:
+                    break
+                st.gen.append(int(t))
+                if int(t) == self.eos_id:
+                    break
+            if st.gen and (st.gen[-1] == self.eos_id
+                           or len(st.gen) >= st.max_new):
+                gen = np.asarray(st.gen, np.int32)
+                outs.append(self._complete(
+                    st.uid, np.concatenate([st.prompt, gen]), gen,
+                    len(st.gen) / max(st.blocks, 1), st.wall_s))
+                self.stats["requests"] += 1
+                self._cache = self._reset_fn(self._cache, jnp.int32(s))
+                self._slots[s] = None
+                self._done[s] = True
+
+        self._blocks_since_update += 1
+        if (self.learn and self._blocks_since_update >= self.update_every
+                and int(self.state.buf["count"]) > 0):
+            self._blocks_since_update = 0
+            self._drafter_update(1)
+        return outs
+
+    # ------------------------------------------------------------------
+    # driver
+    # ------------------------------------------------------------------
+
+    def step(self) -> List[Completion]:
+        if self.scheduler == "continuous":
+            return self._step_continuous()
+        return self._step_sync()
+
+    @property
+    def busy(self) -> bool:
+        return (bool(self._fifo) or self.active_slots > 0
+                or any(self._queue.values()))
 
     def run(self, max_steps: int = 10**9) -> List[Completion]:
         done: List[Completion] = []
         for _ in range(max_steps):
-            out = self.step()
-            if not out:
+            if not self.busy:
                 break
-            done.extend(out)
+            done.extend(self.step())
         return done
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+
+    def reset_stats(self) -> None:
+        """Zero counters/latencies (e.g. after a warm-up run); jit caches,
+        drafter state, and live slots are untouched."""
+        self.stats = {"requests": 0, "blocks": 0, "committed": 0,
+                      "accepted": 0, "drafted": 0, "updates": 0,
+                      "latencies": []}
+        self._slot_accepted[:] = 0
+        self._slot_drafted[:] = 0
 
     @property
     def acceptance(self) -> float:
         return self.stats["accepted"] / max(self.stats["drafted"], 1)
+
+    @property
+    def slot_acceptance(self) -> np.ndarray:
+        """(num_slots,) lifetime acceptance rate per lane."""
+        return self._slot_accepted / np.maximum(self._slot_drafted, 1)
+
+    def latency_percentiles(self) -> dict:
+        lats = self.stats["latencies"]
+        if not lats:
+            return {"p50_s": 0.0, "p95_s": 0.0, "mean_s": 0.0}
+        return {"p50_s": float(np.percentile(lats, 50)),
+                "p95_s": float(np.percentile(lats, 95)),
+                "mean_s": float(np.mean(lats))}

@@ -2,6 +2,12 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+try:                                  # property tests use hypothesis when
+    import hypothesis  # noqa: F401  # available; else a deterministic shim
+except ModuleNotFoundError:
+    import _hyp_fallback
+    _hyp_fallback.install()
+
 from repro.configs import ALL_ARCHS, get_config
 from repro.models.model import build_model
 

@@ -15,7 +15,8 @@ def test_rms_norm_scale_invariant_direction():
     w = jnp.zeros((8,))
     y1 = rms_norm(x, w)
     y2 = rms_norm(3.0 * x, w)
-    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5)
+    # scale invariance holds only up to eps=1e-5 inside rsqrt(var + eps)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4)
     np.testing.assert_allclose(
         np.asarray(jnp.mean(y1 * y1, -1)), np.ones(4), rtol=1e-4)
 

@@ -1,18 +1,23 @@
-"""serve_step (the decode dry-run workload) is the same speculative block
-the generation engine runs: chained serve_steps must reproduce the greedy
-AR continuation exactly."""
+"""The unified speculative block-step (`spec_block_step`) is the ONE owner of
+draft -> verify -> commit: chained block-steps must reproduce the greedy AR
+continuation exactly, and composing it in a loop must reproduce
+`speculative_generate`'s committed stream token-for-token (greedy AND
+rejection-sampling paths)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
-from conftest import ARCHS, make_aux
+from conftest import ARCHS, make_aux, tiny_cfg
 from repro.core import lora, spec
+from repro.models import transformer as tfm
+from repro.models.model import build_model
 
 
 @pytest.mark.parametrize("name", ["vicuna-7b", "mamba2-370m",
                                   "llama4-scout-17b-a16e", "deepseek-v3-671b"])
-def test_chained_serve_steps_lossless(tiny_models, name):
+def test_chained_block_steps_lossless(tiny_models, name):
     cfg, model, params = tiny_models(name)
     dvi = lora.init_draft_params(jax.random.PRNGKey(5), cfg)
     B, Tp = 2, 8
@@ -25,25 +30,108 @@ def test_chained_serve_steps_lossless(tiny_models, name):
     pending = prompts[:, -1]
     emitted = [[] for _ in range(B)]
     for _ in range(8):
-        pending, commit_vec, accept, cache = spec.serve_step(
-            model, params, dvi, pending, cache)
+        blk = spec.spec_block_step(model, params, dvi, pending, cache)
+        pending, cache = blk.pending, blk.cache
         for b in range(B):
-            emitted[b].extend(np.asarray(commit_vec[b, :int(accept[b])]).tolist())
+            emitted[b].extend(
+                np.asarray(blk.commit_vec[b, :int(blk.accept[b])]).tolist())
     for b in range(B):
         ref = np.asarray(r_ar.tokens[b, Tp:int(r_ar.lengths[b])]).tolist()
         n = min(len(ref), len(emitted[b]))
         assert emitted[b][:n] == ref[:n], f"{name} seq {b} diverged"
 
 
-def test_serve_step_accept_range(tiny_models):
+def test_block_step_accept_range_and_done_mask(tiny_models):
     cfg, model, params = tiny_models("vicuna-7b")
     dvi = lora.init_draft_params(jax.random.PRNGKey(5), cfg)
     prompts = jax.random.randint(jax.random.PRNGKey(2), (3, 8), 2,
                                  cfg.vocab_size)
     _, cache, _ = model.prefill(params, prompts[:, :-1], max_len=64)
-    pending, commit_vec, accept, cache = spec.serve_step(
-        model, params, dvi, prompts[:, -1], cache)
     K = cfg.dvi.k_spec
-    assert bool(jnp.all((accept >= 1) & (accept <= K + 1)))
-    assert commit_vec.shape == (3, K + 1)
-    assert bool(jnp.all(cache["lengths"] == 7 + accept))
+    done = jnp.array([False, True, False])
+    blk = spec.spec_block_step(model, params, dvi, prompts[:, -1], cache,
+                               done=done)
+    assert bool(jnp.all((blk.accept >= 1) | done))
+    assert bool(jnp.all(blk.accept <= K + 1))
+    # masked lane: nothing committed, pending passed through, length frozen
+    assert int(blk.accept[1]) == 0
+    assert int(blk.pending[1]) == int(prompts[1, -1])
+    assert int(blk.cache["lengths"][1]) == 7
+    assert bool(jnp.all(blk.cache["lengths"][jnp.array([0, 2])]
+                        == 7 + blk.accept[jnp.array([0, 2])]))
+    assert blk.commit_vec.shape == (3, K + 1)
+
+
+def test_serve_step_wrapper_delegates(tiny_models):
+    """Back-compat wrapper (used by the decode dry-run) is a pure delegate."""
+    cfg, model, params = tiny_models("vicuna-7b")
+    dvi = lora.init_draft_params(jax.random.PRNGKey(5), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (3, 8), 2,
+                                 cfg.vocab_size)
+    _, cache, _ = model.prefill(params, prompts[:, :-1], max_len=64)
+    pending, commit_vec, accept, cache2 = spec.serve_step(
+        model, params, dvi, prompts[:, -1], cache)
+    blk = spec.spec_block_step(model, params, dvi, prompts[:, -1], cache)
+    assert bool(jnp.all(pending == blk.pending))
+    assert bool(jnp.all(commit_vec == blk.commit_vec))
+    assert bool(jnp.all(accept == blk.accept))
+
+
+def _compose_blocks(model, params, dvi, prompts, max_new, temperature=0.0,
+                    key=None, eos_id=1):
+    """Re-derive speculative_generate's stream by looping spec_block_step
+    with host-side output/EOS bookkeeping."""
+    cfg = model.cfg
+    K = cfg.dvi.k_spec
+    B, Tp = prompts.shape
+    total = Tp + max_new + K + 2
+    _, cache, _ = model.prefill(params, prompts[:, :Tp - 1],
+                                max_len=total + tfm.RING_SLACK)
+    pending = prompts[:, Tp - 1]
+    key = key if key is not None else jax.random.PRNGKey(0)
+    out = np.zeros((B, total), np.int32)
+    out[:, :Tp] = np.asarray(prompts)
+    out_len = np.full((B,), Tp)
+    done = np.zeros((B,), bool)
+    while not done.all():
+        blk = spec.spec_block_step(model, params, dvi, pending, cache,
+                                   done=jnp.asarray(done),
+                                   temperature=temperature, key=key)
+        pending, cache, key = blk.pending, blk.cache, blk.key
+        acc = np.asarray(blk.accept)
+        cv = np.asarray(blk.commit_vec)
+        for b in range(B):
+            a = int(acc[b])
+            out[b, out_len[b]:out_len[b] + a] = cv[b, :a]
+            if (cv[b, :a] == eos_id).any():
+                done[b] = True
+            out_len[b] += a
+            if out_len[b] >= Tp + max_new:
+                done[b] = True
+    return out, out_len
+
+
+@given(st.integers(0, 2 ** 16), st.sampled_from([0.0, 0.8]))
+@settings(max_examples=6, deadline=None)
+def test_block_step_composition_matches_generate(seed, temperature):
+    """Property: spec_block_step composed in a loop reproduces
+    speculative_generate token-for-token — greedy and rejection-sampling."""
+    cfg = tiny_cfg("vicuna-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed % 97))
+    dvi = lora.init_draft_params(jax.random.PRNGKey(seed % 31), cfg)
+    dvi = dict(dvi, B=jax.random.normal(jax.random.PRNGKey(seed),
+                                        dvi["B"].shape) * 0.05)
+    prompts = jax.random.randint(jax.random.PRNGKey(seed), (2, 6), 2,
+                                 cfg.vocab_size)
+    key = jax.random.PRNGKey(seed + 1)
+    ref = spec.speculative_generate(model, params, dvi, prompts, 12,
+                                    temperature=temperature, key=key)
+    out, out_len = _compose_blocks(model, params, dvi, prompts, 12,
+                                   temperature=temperature, key=key)
+    np.testing.assert_array_equal(out_len, np.asarray(ref.lengths))
+    cap = 6 + 12          # done-lane writes may clamp-scribble past Tp+max_new
+    for b in range(2):
+        n = min(int(out_len[b]), cap)
+        np.testing.assert_array_equal(out[b, :n],
+                                      np.asarray(ref.tokens[b, :n]))
