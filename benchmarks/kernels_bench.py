@@ -9,8 +9,10 @@ import numpy as np
 
 from benchmarks.common import emit, timed
 from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention
+from repro.kernels.decode_attention import \
+    decode_attention_pallas as decode_attention
 from repro.kernels.lora_logits import lora_logits
+from repro.kernels.paged_decode_attention import paged_decode_attention
 from repro.kernels.ssd_scan import ssd_scan
 from repro.kernels.verify_argmax import verify_argmax
 
@@ -39,6 +41,22 @@ def main():
                                           interpret=True))
     err = float(jnp.abs(o - ref.ref_decode_attention(q, k, v, lens)).max())
     emit("kernel/decode_attention", t * 1e6, f"max_err={err:.2e}")
+
+    # paged layout of the same cache: 4 pages/lane of 64 slots, shuffled
+    ps, ppl = 64, 4
+    perm = np.random.default_rng(0).permutation(4 * ppl) + 1
+    tbl = jnp.asarray(perm.reshape(4, ppl).astype(np.int32))
+    kp = jnp.concatenate([jnp.zeros((1, ps, 4, 64)),
+                          k.reshape(4 * ppl, ps, 4, 64)])
+    vp = jnp.concatenate([jnp.zeros((1, ps, 4, 64)),
+                          v.reshape(4 * ppl, ps, 4, 64)])
+    kp = kp.at[jnp.asarray(perm)].set(kp[1:])
+    vp = vp.at[jnp.asarray(perm)].set(vp[1:])
+    t, o = timed(lambda: paged_decode_attention(q, kp, vp, lens, tbl,
+                                                interpret=True))
+    err = float(jnp.abs(o - ref.ref_paged_decode_attention(
+        q, kp, vp, lens, tbl)).max())
+    emit("kernel/paged_decode_attention", t * 1e6, f"max_err={err:.2e}")
 
     xh = jax.random.normal(jax.random.PRNGKey(7), (2, 128, 8, 32))
     Bc = jax.random.normal(jax.random.PRNGKey(8), (2, 128, 1, 64)) * 0.5

@@ -1,22 +1,31 @@
 """Serving-scheduler benchmark: sync (batch) vs continuous (slot) batching
-on the SAME Poisson arrival trace — throughput and tail latency.
+— and optionally the paged-KV continuous scheduler — on the SAME Poisson
+arrival trace: throughput, tail latency, and memory efficiency.
 
 The sync scheduler buckets requests, pads the batch, and decodes everyone to
 completion before admitting new work, so one long request holds the batch
 hostage (head-of-line blocking) and arrivals wait for the next batch
 boundary.  The continuous scheduler retires and admits per-slot every block,
-so short requests stream out under long ones.  Both run the same unified
+so short requests stream out under long ones.  The ``--paged`` arm keeps
+the continuous scheduler but swaps worst-case per-lane cache reservations
+for the shared page pool at the SAME token-memory budget — which buys twice
+the decode lanes, so it admits more concurrent requests per byte (the
+``admitted_per_gb`` column).  All arms run the same unified
 ``spec_block_step`` core with online drafter updates.
 
   PYTHONPATH=src python benchmarks/serving_bench.py            # full
   PYTHONPATH=src python benchmarks/serving_bench.py --smoke    # CI job
+  PYTHONPATH=src python benchmarks/serving_bench.py --paged --json out.json
 
 Output: one CSV-ish line per scheduler:
   scheduler,requests,gen_tokens,tok_per_s,p50_ms,p95_ms,acceptance
+plus (``--json``) a machine-readable record per arm with pool utilization /
+preemption / concurrency stats for bench-trajectory tracking in CI.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -24,7 +33,9 @@ import numpy as np
 
 from common import bench_backbone
 from repro.core import online
+from repro.models import transformer as tfm
 from repro.serving import Request, ServingEngine
+from repro.serving.kv_pool import pages_for
 
 PROMPT_LENS = (8, 12, 16)
 MAX_NEWS = (8, 16, 24)
@@ -44,12 +55,20 @@ def build_trace(n, rate_hz, tasks, vocab, seed=0):
     return trace
 
 
+def kv_bytes_per_token(cfg) -> int:
+    """KV-cache bytes per cached token (all layers, K+V)."""
+    itemsize = 1 if cfg.kv_quant else cfg.jnp_dtype.itemsize
+    return (cfg.num_layers * 2 * cfg.num_kv_heads * cfg.resolved_head_dim
+            * itemsize)
+
+
 def run_trace(scheduler, model, params, trace, num_slots, batch_size,
-              warm=()):
+              warm=(), engine_kw=None):
     state = online.init_trainer(model, jax.random.PRNGKey(7))
     eng = ServingEngine(model, params, state, scheduler=scheduler,
                         num_slots=num_slots, batch_size=batch_size,
-                        max_new=max(MAX_NEWS), buckets=(max(PROMPT_LENS),))
+                        max_new=max(MAX_NEWS), buckets=(max(PROMPT_LENS),),
+                        **(engine_kw or {}))
     # warm THIS engine's jit caches (they live in the engine instance) so the
     # timed run below pays no XLA compilation
     for _, wreq in warm:
@@ -73,22 +92,41 @@ def run_trace(scheduler, model, params, trace, num_slots, batch_size,
     return eng, done, makespan
 
 
-def report(name, eng, done, makespan):
+def report(name, eng, done, makespan, token_budget=0):
     toks = sum(len(c.gen_tokens) for c in done)
     lat = eng.latency_percentiles()
     print(f"{name},{len(done)},{toks},{toks / makespan:.1f},"
           f"{lat['p50_s'] * 1e3:.0f},{lat['p95_s'] * 1e3:.0f},"
           f"{eng.acceptance:.3f}")
-    return toks / makespan, lat["p95_s"]
+    rec = {"scheduler": name, "requests": len(done), "gen_tokens": toks,
+           "tok_per_s": toks / makespan, "p50_ms": lat["p50_s"] * 1e3,
+           "p95_ms": lat["p95_s"] * 1e3, "acceptance": eng.acceptance,
+           "peak_live_slots": eng.stats.get("peak_live_slots", 0),
+           "num_slots": eng.num_slots}
+    if token_budget:
+        gb = token_budget * kv_bytes_per_token(eng.model.cfg) / 2**30
+        rec["kv_budget_tokens"] = token_budget
+        rec["admitted_per_gb"] = len(done) / gb
+    if eng.paged:
+        rec["kv"] = eng.kv_stats()
+    return rec
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI run: fewer requests, smaller backbone")
+    ap.add_argument("--paged", action="store_true",
+                    help="add a paged-KV continuous arm (equal token memory, "
+                         "2x lanes)")
+    ap.add_argument("--json", default="",
+                    help="write per-arm records to this JSON file")
     ap.add_argument("--requests", type=int, default=0)
     ap.add_argument("--rate", type=float, default=0.0, help="arrivals/sec")
     ap.add_argument("--num-slots", type=int, default=8)
+    ap.add_argument("--kv-page-size", type=int, default=8)
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="paged arm pool size (0 = match contiguous memory)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -108,12 +146,42 @@ def main():
     rate = args.rate or (4.0 if args.smoke else 2.0)
     trace = build_trace(n, rate, tasks, cfg.vocab_size, seed=args.seed)
     print("scheduler,requests,gen_tokens,tok_per_s,p50_ms,p95_ms,acceptance")
-    s_tp, s_p95 = report("sync", *run_trace("sync", model, params, trace,
-                                            slots, args.batch, warm=warm))
-    c_tp, c_p95 = report("continuous", *run_trace(
-        "continuous", model, params, trace, slots, args.batch, warm=warm))
+    # contiguous cap per lane (mirror of ServingEngine.__post_init__)
+    cap = (max(PROMPT_LENS) + max(MAX_NEWS) + cfg.dvi.k_spec + 2
+           + tfm.RING_SLACK)
+    budget = slots * cap                       # token-slots both arms share
+    recs = [report("sync", *run_trace("sync", model, params, trace, slots,
+                                      args.batch, warm=warm), budget),
+            report("continuous", *run_trace(
+                "continuous", model, params, trace, slots, args.batch,
+                warm=warm), budget)]
+    s_tp, s_p95 = recs[0]["tok_per_s"], recs[0]["p95_ms"]
+    c_tp, c_p95 = recs[1]["tok_per_s"], recs[1]["p95_ms"]
     print(f"# continuous vs sync: {c_tp / max(s_tp, 1e-9):.2f}x throughput, "
           f"{s_p95 / max(c_p95, 1e-9):.2f}x lower p95")
+
+    if args.paged:
+        pages = args.kv_pages or pages_for(budget, args.kv_page_size)
+        recs.append(report("paged", *run_trace(
+            "continuous", model, params, trace, 2 * slots, args.batch,
+            warm=warm, engine_kw={"kv_pages": pages,
+                                  "kv_page_size": args.kv_page_size}),
+            pages * args.kv_page_size))
+        p = recs[-1]
+        print(f"# paged vs continuous (equal kv memory, 2x lanes): "
+              f"{p['tok_per_s'] / max(c_tp, 1e-9):.2f}x throughput, "
+              f"peak_live {p['peak_live_slots']} vs "
+              f"{recs[1]['peak_live_slots']}, "
+              f"preemptions={p['kv']['preemptions']}, "
+              f"peak_util={p['kv']['peak_utilization']:.2f}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"arms": recs, "requests": n, "rate_hz": rate,
+                       "backbone": cfg.name,
+                       "kv_bytes_per_token": kv_bytes_per_token(cfg)}, f,
+                      indent=2)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

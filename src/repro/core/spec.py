@@ -25,6 +25,13 @@ two ways: ``speculative_generate`` loops it inside ``jax.lax.while_loop``
 (batch decoding with tuple logging), and the continuous-batching
 ``ServingEngine`` interleaves it with per-slot cache surgery (admission /
 retirement) so ragged traffic shares one persistent decode batch.
+
+The cache may be contiguous (``init_cache``) or paged
+(``init_paged_cache``): a paged cache carries its block table inside the
+pytree (``cache["tbl"]``), so every draft feed and the deep verify pass
+transparently read/write KV through the page indirection — the block-step
+logic is layout-agnostic, and speculative rollback stays "truncate the
+lane length" in both layouts (see repro.serving.kv_pool).
 """
 from __future__ import annotations
 

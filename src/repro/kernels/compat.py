@@ -1,0 +1,13 @@
+"""Shared Pallas-TPU version-compat shims for all kernels in this package.
+
+jax 0.5+ renamed ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``;
+every kernel imports the resolved alias from here instead of re-deriving it.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = (getattr(pltpu, "CompilerParams", None)
+                  or pltpu.TPUCompilerParams)
+
+__all__ = ["CompilerParams"]

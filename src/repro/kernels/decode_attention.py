@@ -1,4 +1,8 @@
-"""Flash-decode GQA attention over the KV cache (single query token).
+"""Flash-decode GQA attention over a contiguous KV cache (single query).
+
+Dispatch through ``repro.kernels.ops.decode_attention`` (the single entry
+point choosing ref vs Pallas vs paged); this module only holds the
+contiguous Pallas implementation.
 
 TPU adaptation of flash-decoding: the KV sequence is blocked; each grid
 step stages one (bs, hd) K/V tile HBM->VMEM, updates an online-softmax
@@ -19,8 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# jax 0.5+ renamed TPUCompilerParams -> CompilerParams; support both
-_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+from repro.kernels.compat import CompilerParams as _CompilerParams
 
 NEG = -1e30
 
@@ -61,9 +64,9 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
                        ).astype(o_ref.dtype)
 
 
-def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                     lengths: jax.Array, *, block_s: int = 512,
-                     interpret: bool = False):
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            lengths: jax.Array, *, block_s: int = 512,
+                            interpret: bool = False):
     """q (B, H, hd); k/v (B, S, KV, hd); lengths (B,) -> out (B, H, hd)."""
     B, H, hd = q.shape
     S, KV = k.shape[1], k.shape[2]

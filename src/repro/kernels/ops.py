@@ -1,9 +1,15 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Jit'd public wrappers for the Pallas kernels — the single dispatch point.
 
 On CPU (this container) kernels run in ``interpret=True`` mode — the kernel
 body executes in Python for bit-faithful validation against the ref.py
 oracles; on a real TPU backend the same calls compile to Mosaic.  Set
 ``REPRO_FORCE_INTERPRET=0`` to force compiled mode.
+
+``decode_attention`` dispatches across the three implementations by
+argument/`impl`: the pure-jnp oracle (``impl="ref"``), the contiguous
+flash-decode Pallas kernel (default), and the paged block-table kernel
+(``paged_decode_attention`` / ``impl="paged"`` spelled as the dedicated
+entry point, since the paged cache has different operands).
 """
 from __future__ import annotations
 
@@ -14,8 +20,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.decode_attention import \
+    decode_attention_pallas as _decode_attention
 from repro.kernels.lora_logits import lora_logits as _lora_logits
+from repro.kernels.paged_decode_attention import \
+    paged_decode_attention as _paged_decode_attention
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 from repro.kernels.verify_argmax import verify_argmax as _verify_argmax
 
@@ -40,10 +49,26 @@ def lora_logits(h, w, a, b, gamma: float, block_t: int = 128,
                         interpret=_interpret())
 
 
-@partial(jax.jit, static_argnames=("block_s",))
-def decode_attention(q, k, v, lengths, block_s: int = 512):
+@partial(jax.jit, static_argnames=("block_s", "impl"))
+def decode_attention(q, k, v, lengths, block_s: int = 512, impl: str = "pallas"):
+    """Contiguous-cache flash decode.  impl: "pallas" (default; interpret
+    mode on CPU) or "ref" (pure-jnp oracle)."""
+    if impl == "ref":
+        return ref.ref_decode_attention(q, k, v, lengths)
     return _decode_attention(q, k, v, lengths, block_s=block_s,
                              interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def paged_decode_attention(q, k_pages, v_pages, lengths, block_tables,
+                           impl: str = "pallas"):
+    """Paged-cache flash decode: K/V tiles gathered through the per-lane
+    block table (see repro.serving.kv_pool for the layout)."""
+    if impl == "ref":
+        return ref.ref_paged_decode_attention(q, k_pages, v_pages, lengths,
+                                              block_tables)
+    return _paged_decode_attention(q, k_pages, v_pages, lengths, block_tables,
+                                   interpret=_interpret())
 
 
 @partial(jax.jit, static_argnames=("chunk",))
@@ -51,4 +76,5 @@ def ssd_scan(xh, Bc, Cc, dt, A, chunk: int = 128):
     return _ssd_scan(xh, Bc, Cc, dt, A, chunk, interpret=_interpret())
 
 
-__all__ = ["verify_argmax", "lora_logits", "decode_attention", "ssd_scan", "ref"]
+__all__ = ["verify_argmax", "lora_logits", "decode_attention",
+           "paged_decode_attention", "ssd_scan", "ref"]

@@ -42,6 +42,35 @@ def ref_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(B, H, hd)
 
 
+def ref_paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, lengths: jax.Array,
+                               block_tables: jax.Array,
+                               scale: float | None = None):
+    """Paged oracle: q (B, H, hd); k_pages/v_pages (P, ps, KV, hd) pooled
+    pages (page 0 = null); lengths (B,); block_tables (B, MPS) int32
+    (-1 = unmapped).  Materializes each lane's logical view through the
+    block table, then attends slots j < length on mapped pages."""
+    from repro.serving.kv_pool import logical_to_physical
+    B, H, hd = q.shape
+    P, ps, KV = k_pages.shape[:3]
+    MPS = block_tables.shape[1]
+    L = MPS * ps
+    j = jnp.arange(L)
+    rpage, rphys = logical_to_physical(
+        block_tables, jnp.broadcast_to(j[None, :], (B, L)), ps)   # (B, L)
+    kf = k_pages.reshape((P * ps, KV, hd))[rphys]             # (B, L, KV, hd)
+    vf = v_pages.reshape((P * ps, KV, hd))[rphys]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(jnp.float32(hd))
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, kf).astype(jnp.float32) * scale
+    mask = (rpage >= 0) & (j[None, :] < lengths[:, None])     # (B, L)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(vf.dtype)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, vf)
+    return out.reshape(B, H, hd)
+
+
 def ref_ssd_scan(xh, Bc, Cc, dt, A, chunk: int, h0=None):
     """Alias of the model-level chunked SSD (see repro.models.ssm)."""
     return ssd_chunked(xh, Bc, Cc, dt, A, chunk, h0=h0)

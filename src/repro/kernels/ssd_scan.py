@@ -20,8 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# jax 0.5+ renamed TPUCompilerParams -> CompilerParams; support both
-_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+from repro.kernels.compat import CompilerParams as _CompilerParams
 
 
 def _kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, y_ref, hout_ref, hstate_ref,

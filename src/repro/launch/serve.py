@@ -12,6 +12,11 @@ Two schedulers (``--scheduler``):
 * ``sync`` — legacy batch-synchronous path (bucket, pad, decode the whole
   batch to completion) for comparison.
 
+``--kv-pages N`` (with ``--kv-page-size``) switches the continuous
+scheduler onto the paged KV pool: admission is gated on free pages instead
+of worst-case slot reservations, and the engine preempts-or-queues when
+the pool runs dry (see repro.serving.kv_pool).
+
   PYTHONPATH=src python -m repro.launch.serve --arch vicuna-7b --tiny \\
       --requests 64 --shift-at 32 --scheduler continuous --num-slots 8
 """
@@ -41,6 +46,10 @@ def main():
                     default="continuous")
     ap.add_argument("--num-slots", type=int, default=8,
                     help="decode lanes for the continuous scheduler")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help=">0: paged KV cache with this many pool pages")
+    ap.add_argument("--kv-page-size", type=int, default=16,
+                    help="tokens per KV page (paged mode)")
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--shift-at", type=int, default=0,
@@ -61,7 +70,8 @@ def main():
     eng = ServingEngine(model, params, state, scheduler=args.scheduler,
                         num_slots=args.num_slots, batch_size=args.batch,
                         max_new=args.max_new, learn=not args.no_learn,
-                        buckets=(args.prompt_len,))
+                        buckets=(args.prompt_len,), kv_pages=args.kv_pages,
+                        kv_page_size=args.kv_page_size)
     t0 = time.time()
     done = []
     for i in range(args.requests):
@@ -80,6 +90,11 @@ def main():
     print(f"[serve] {len(done)} completions, {toks} gen tokens in {dt:.1f}s "
           f"({toks/dt:.1f} tok/s); final acceptance={eng.acceptance:.3f}; "
           f"latency p50={lat['p50_s']:.2f}s p95={lat['p95_s']:.2f}s")
+    if args.kv_pages:
+        kv = eng.kv_stats()
+        print(f"[serve] paged KV: peak_util={kv['peak_utilization']:.2f} "
+              f"preemptions={kv['preemptions']} "
+              f"peak_live={kv['peak_live_slots']}")
 
 
 if __name__ == "__main__":

@@ -157,6 +157,14 @@ class Model:
     def init_cache(self, B: int, max_len: int):
         return tfm.init_cache(self.cfg, B, max_len)
 
+    def init_paged_cache(self, B: int, num_pages: int, page_size: int,
+                         max_pages_per_slot: int):
+        """Pooled paged decode cache: full-attention KV in `num_pages`
+        shared pages addressed via a per-lane block table (see
+        repro.serving.kv_pool for layout and rollback rules)."""
+        return tfm.init_paged_cache(self.cfg, B, num_pages, page_size,
+                                    max_pages_per_slot)
+
     def prefill(self, params, tokens, aux_inputs=None, cache=None,
                 max_len: Optional[int] = None):
         """Process the prompt; build a decode cache.  Returns (h, cache, enc)."""

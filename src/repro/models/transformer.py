@@ -20,6 +20,18 @@ Two execution modes:
   speculative writes never clobber live slots).  Stateful mixers (SSD,
   RG-LRU) return per-step candidate states; ``commit_cache`` selects the
   state at the accepted length.
+
+Two cache layouts share these entry points:
+
+* **contiguous** (``init_cache``) — each lane reserves a worst-case
+  ``(B, max_len)`` KV region; simple, but one long request strands memory.
+* **paged** (``init_paged_cache``) — full-attention KV lives in a shared
+  page pool ``(n, P, page_size, KV, hd)`` addressed through a per-lane
+  block table ``cache["tbl"]`` (see ``repro.serving.kv_pool`` for the
+  layout and rollback rules); ring/SSD/RG-LRU segments keep their
+  per-slot constant-size state.  ``insert_slot`` becomes a block-table
+  scatter and ``reset_slot`` just unmaps the lane's row — physical pages
+  are recycled host-side by the serving engine's ``KVPool``.
 """
 from __future__ import annotations
 
@@ -329,6 +341,79 @@ def attn_layer_step(p, x, kcache, vcache, slot_pos, lengths, cfg: ModelConfig,
     return x, new_k, new_v, new_ks, new_vs, aux
 
 
+def attn_layer_step_paged(p, x, kcache, vcache, tbl, lengths, cfg: ModelConfig,
+                          seg: Segment, aux, use_rope=True, kscale=None,
+                          vscale=None):
+    """Block-decode attention against the POOLED paged cache.
+
+    kcache/vcache: (P, page_size, KV, hd) physical pages shared by every
+    lane (page 0 = null page, never allocated).  tbl: (B, MPS) int32 block
+    table — logical position t of lane b lives at physical slot
+    ``tbl[b, t // ps] * ps + t % ps``; -1 entries clamp onto the null page
+    so eager writes from dead lanes are harmless.  Speculative rollback is
+    identical to the contiguous path: lengths simply don't advance past the
+    accepted prefix and the stale slots are overwritten next block.
+    Returns (x, new_k, new_v, new_ks, new_vs, aux)."""
+    B, T = x.shape[:2]
+    Pp, ps = kcache.shape[:2]
+    MPS = tbl.shape[1]
+    Lv = MPS * ps                                 # per-lane logical capacity
+    from repro.launch.hints import hint
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+    xn = hint(xn, None, None, "data")             # weight-stationary decode
+    qpos = lengths[:, None] + jnp.arange(T)[None, :]              # (B, T)
+    q, k, v = _qkv(p, xn, cfg)
+    q = hint(q, "data", None, None, None)
+    k = hint(k, "data", None, None, None)
+    v = hint(v, "data", None, None, None)
+    if use_rope:
+        q = apply_rope(q, qpos, cfg.rope_theta)
+        k = apply_rope(k, qpos, cfg.rope_theta)
+
+    def flat(c):
+        return c.reshape((Pp * ps,) + c.shape[2:])
+
+    # eager paged write: scatter the T-token block through the block table.
+    # Distinct lanes own disjoint pages, so indices never collide except on
+    # the null page (garbage by construction, masked out of every read).
+    from repro.serving.kv_pool import logical_to_physical
+    _, wphys = logical_to_physical(tbl, qpos, ps)
+    wphys = wphys.reshape(-1)
+
+    def write(cache, blk):
+        return flat(cache).at[wphys].set(
+            blk.reshape((B * T,) + blk.shape[2:]).astype(cache.dtype)
+        ).reshape(cache.shape)
+
+    new_ks = new_vs = None
+    if cfg.kv_quant:
+        kq, ks_blk = kv_quantize(k)
+        vq, vs_blk = kv_quantize(v)
+        new_k, new_v = write(kcache, kq), write(vcache, vq)
+        new_ks, new_vs = write(kscale, ks_blk), write(vscale, vs_blk)
+    else:
+        new_k, new_v = write(kcache, k), write(vcache, v)
+
+    # gather this lane's logical view back out of the pool (the Pallas
+    # paged_decode_attention kernel fetches the same tiles page-by-page via
+    # a scalar-prefetched block table instead of materializing the view)
+    j = jnp.arange(Lv)
+    rpage, rphys = logical_to_physical(
+        tbl, jnp.broadcast_to(j[None, :], (B, Lv)), ps)           # (B, Lv)
+    k_eff = flat(new_k)[rphys]                                    # (B,Lv,KV,hd)
+    v_eff = flat(new_v)[rphys]
+    if cfg.kv_quant:
+        k_eff = kv_dequantize(k_eff, flat(new_ks)[rphys], x.dtype)
+        v_eff = kv_dequantize(v_eff, flat(new_vs)[rphys], x.dtype)
+    slot_pos = jnp.where((rpage >= 0) & (j[None, :] < lengths[:, None] + T),
+                         j[None, :], -1)
+    mask = (slot_pos[:, None, :] <= qpos[:, :, None]) & (slot_pos[:, None, :] >= 0)
+    out = attend(q, k_eff, v_eff, mask)
+    x = x + out.reshape(B, T, -1) @ p["wo"]
+    x, aux = _ffn(p, x, cfg, seg.ffn, aux, dropless=True)
+    return x, new_k, new_v, new_ks, new_vs, aux
+
+
 def mla_layer_step(p, x, ckv_cache, krope_cache, lengths, cfg, seg, aux):
     xn = rms_norm(x, p["ln1"], cfg.norm_eps)
     qpos = lengths[:, None] + jnp.arange(x.shape[1])[None, :]
@@ -386,11 +471,37 @@ def run_segment_full(sp, x, cfg: ModelConfig, seg: Segment, positions,
 
 
 def run_segment_step(sp, x, seg_cache, cross_cache, lengths, cfg: ModelConfig,
-                     seg: Segment):
-    """Returns (x, new_seg_cache, candidates, aux)."""
+                     seg: Segment, tbl=None):
+    """Returns (x, new_seg_cache, candidates, aux).  `tbl` is the paged
+    block table (B, MPS) when the cache is paged (seg_cache holds pooled
+    "kp"/"vp" pages instead of per-lane "k"/"v")."""
     T = x.shape[1]
     aux0 = jnp.float32(0.0)
     use_rope = cfg.arch_type != "audio"
+
+    if "kp" in seg_cache:                  # pooled paged full attention
+        quant = cfg.kv_quant
+
+        def body(carry, xs):
+            x, aux = carry
+            ks = vs = None
+            lp, kc, vc = xs[:3]
+            if quant:
+                ks, vs = xs[3], xs[4]
+            x, nk, nv, nks, nvs, aux = attn_layer_step_paged(
+                lp, x, kc, vc, tbl, lengths, cfg, seg, aux, use_rope,
+                kscale=ks, vscale=vs)
+            ys = (nk, nv) + ((nks, nvs) if quant else ())
+            return (x, aux), ys
+
+        xs = (sp, seg_cache["kp"], seg_cache["vp"])
+        if quant:
+            xs = xs + (seg_cache["ksp"], seg_cache["vsp"])
+        (x, aux), ys = jax.lax.scan(body, (x, aux0), xs)
+        new_c = {"kp": ys[0], "vp": ys[1]}
+        if quant:
+            new_c["ksp"], new_c["vsp"] = ys[2], ys[3]
+        return x, new_c, {}, aux
 
     if seg.kind == "ssm":
         def body(carry, xs):
@@ -508,6 +619,60 @@ def init_cache(cfg: ModelConfig, B: int, max_len: int, dtype=None) -> dict:
     return {"lengths": jnp.zeros((B,), jnp.int32), "segs": segs}
 
 
+def init_paged_cache(cfg: ModelConfig, B: int, num_pages: int, page_size: int,
+                     max_pages_per_slot: int, dtype=None) -> dict:
+    """Paged cache pytree: full-attention KV pooled into `num_pages` shared
+    fixed-size pages (+1 physical null page at index 0), addressed per lane
+    through the block table ``cache["tbl"]`` (B, max_pages_per_slot) int32
+    (-1 = unmapped).  Sliding-window rings and SSD/RG-LRU states stay
+    per-slot — they are O(window)/O(1) per lane and gain nothing from
+    paging.  Page ownership / recycling is host-side (``serving.kv_pool``).
+    """
+    dtype = dtype or cfg.jnp_dtype
+    if cfg.mla is not None:
+        raise NotImplementedError("paged KV: MLA latent caches not supported")
+    if cfg.encoder is not None:
+        raise NotImplementedError("paged KV: cross-attention caches not supported")
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    Pp = num_pages + 1                       # physical pages incl. null page
+    segs = {}
+    for seg in model_segments(cfg):
+        n = seg.n
+        if seg.kind == "ssm":
+            c = ssm_mod.init_ssm_cache(n, B, cfg.d_model, cfg.ssm, dtype)
+        elif seg.kind == "rglru":
+            c = rglru_mod.init_rglru_cache(n, B, cfg.d_model, cfg.rglru, dtype)
+        elif seg.kind == "local":
+            W = cfg.rglru.local_window if cfg.rglru is not None else cfg.sliding_window
+            C = W + RING_SLACK
+            kv_dtype = jnp.int8 if cfg.kv_quant else dtype
+            c = {"k": jnp.zeros((n, B, C, KV, hd), kv_dtype),
+                 "v": jnp.zeros((n, B, C, KV, hd), kv_dtype),
+                 "pos": jnp.full((B, C), -1, jnp.int32)}
+            if cfg.kv_quant:
+                c["ks"] = jnp.zeros((n, B, C, KV), jnp.float32)
+                c["vs"] = jnp.zeros((n, B, C, KV), jnp.float32)
+        else:                                # full attention -> page pool
+            kv_dtype = jnp.int8 if cfg.kv_quant else dtype
+            c = {"kp": jnp.zeros((n, Pp, page_size, KV, hd), kv_dtype),
+                 "vp": jnp.zeros((n, Pp, page_size, KV, hd), kv_dtype)}
+            if cfg.kv_quant:
+                c["ksp"] = jnp.zeros((n, Pp, page_size, KV), jnp.float32)
+                c["vsp"] = jnp.zeros((n, Pp, page_size, KV), jnp.float32)
+        segs[seg.name] = c
+    return {"lengths": jnp.zeros((B,), jnp.int32),
+            "tbl": jnp.full((B, max_pages_per_slot), -1, jnp.int32),
+            "segs": segs}
+
+
+def map_slot_pages(cache: dict, slot, row: jax.Array) -> dict:
+    """Point lane `slot`'s block-table row at physical pages `row`
+    (MPS,) int32, -1-padded.  Pure table write — no KV moves."""
+    tbl = jax.lax.dynamic_update_slice(cache["tbl"], row[None, :].astype(jnp.int32),
+                                       (slot, 0))
+    return dict(cache, tbl=tbl)
+
+
 def fill_cache_from_full(cfg: ModelConfig, cache: dict, contribs: dict,
                          T: int) -> dict:
     """Scatter prefill contributions (stacked (n,B,T,...)) into the cache.
@@ -568,17 +733,52 @@ def _slot_axis(leaf_name: str) -> int:
     return 0 if leaf_name == "pos" else 1
 
 
+def _insert_paged_seg(cfg: ModelConfig, seg_c: dict, src_c: dict,
+                      tbl: jax.Array, slot, src_slot: int = 0) -> dict:
+    """Splice a contiguous prefill lane into the slot's mapped pages: a
+    block-table-indexed scatter of the source KV into the shared pool.
+    Source positions past the mapped region clamp onto the null page."""
+    from repro.serving.kv_pool import logical_to_physical
+    Pp, ps = seg_c["kp"].shape[1:3]
+    C_src = src_c["k"].shape[2]
+    row = jax.lax.dynamic_slice_in_dim(tbl, slot, 1, 0)           # (1, MPS)
+    _, phys = logical_to_physical(row, jnp.arange(C_src)[None, :], ps)
+    phys = phys[0]
+
+    def splice(pooled, src_leaf):
+        piece = jax.lax.dynamic_slice_in_dim(src_leaf, src_slot, 1, 1)[:, 0]
+        flatp = pooled.reshape((pooled.shape[0], Pp * ps) + pooled.shape[3:])
+        return flatp.at[:, phys].set(piece.astype(pooled.dtype)
+                                     ).reshape(pooled.shape)
+
+    out = dict(seg_c, kp=splice(seg_c["kp"], src_c["k"]),
+               vp=splice(seg_c["vp"], src_c["v"]))
+    if cfg.kv_quant:
+        out["ksp"] = splice(seg_c["ksp"], src_c["ks"])
+        out["vsp"] = splice(seg_c["vsp"], src_c["vs"])
+    return out
+
+
 def insert_slot(cfg: ModelConfig, cache: dict, src: dict, slot,
                 src_slot: int = 0) -> dict:
     """Continuous-batching cache surgery: copy sequence lane `src_slot` of
-    cache `src` (e.g. a freshly prefilled B=1 cache) into lane `slot` of a
-    live batched cache.  All leaves — attention KV (ring or full), quant
-    scales, slot positions, cross-attention KV, and stateful-mixer conv/state
-    — must share capacities with `cache`; only the batch lane differs.
-    `slot` may be a traced scalar, so admission jits once per prompt shape."""
+    cache `src` (e.g. a freshly prefilled B=1 contiguous cache) into lane
+    `slot` of a live batched cache.  Per-slot leaves — attention KV (ring or
+    full), quant scales, slot positions, cross-attention KV, and
+    stateful-mixer conv/state — must share capacities with `cache`; only the
+    batch lane differs.  Paged full-attention segments instead scatter the
+    source KV through the slot's block-table row (map the pages with
+    ``map_slot_pages`` first); the source contiguous capacity only needs to
+    cover the prompt, not the worst case.  `slot` may be a traced scalar, so
+    admission jits once per prompt shape."""
+    tbl = cache.get("tbl")
     new_segs = {}
     for name, seg_c in cache["segs"].items():
         src_c = src["segs"][name]
+        if "kp" in seg_c:
+            new_segs[name] = _insert_paged_seg(cfg, seg_c, src_c, tbl, slot,
+                                               src_slot)
+            continue
         out = {}
         for kname, leaf in seg_c.items():
             ax = _slot_axis(kname)
@@ -588,15 +788,24 @@ def insert_slot(cfg: ModelConfig, cache: dict, src: dict, slot,
         new_segs[name] = out
     ln = jax.lax.dynamic_slice_in_dim(src["lengths"], src_slot, 1, 0)
     lengths = jax.lax.dynamic_update_slice_in_dim(cache["lengths"], ln, slot, 0)
-    return {"lengths": lengths, "segs": new_segs}
+    out = {"lengths": lengths, "segs": new_segs}
+    if tbl is not None:
+        out["tbl"] = tbl
+    return out
 
 
 def reset_slot(cfg: ModelConfig, cache: dict, slot) -> dict:
     """Evict sequence lane `slot`: length 0, attention slots emptied
     (pos = -1), KV and stateful-mixer states zeroed — an inert lane that a
-    later ``insert_slot`` can reuse.  Other lanes are untouched bit-for-bit."""
+    later ``insert_slot`` can reuse.  Other lanes are untouched bit-for-bit.
+    Paged segments need no KV work at all: the lane's block-table row is
+    unmapped (-1) and the physical pages go back to the host-side pool —
+    copy-free eviction."""
     new_segs = {}
     for name, seg_c in cache["segs"].items():
+        if "kp" in seg_c:                    # pool pages are recycled, not zeroed
+            new_segs[name] = seg_c
+            continue
         out = {}
         for kname, leaf in seg_c.items():
             ax = _slot_axis(kname)
@@ -608,7 +817,12 @@ def reset_slot(cfg: ModelConfig, cache: dict, slot) -> dict:
         new_segs[name] = out
     lengths = jax.lax.dynamic_update_slice_in_dim(
         cache["lengths"], jnp.zeros((1,), jnp.int32), slot, 0)
-    return {"lengths": lengths, "segs": new_segs}
+    out = {"lengths": lengths, "segs": new_segs}
+    if "tbl" in cache:
+        MPS = cache["tbl"].shape[1]
+        out["tbl"] = jax.lax.dynamic_update_slice(
+            cache["tbl"], jnp.full((1, MPS), -1, jnp.int32), (slot, 0))
+    return out
 
 
 def commit_cache(cfg: ModelConfig, cache: dict, cands: dict,
@@ -635,7 +849,10 @@ def commit_cache(cfg: ModelConfig, cache: dict, cands: dict,
         c["conv"] = select(cand["conv"], c["conv"])
         c["state"] = select(cand["state"], c["state"])
         new_segs[seg.name] = c
-    return {"lengths": cache["lengths"] + accept, "segs": new_segs}
+    out = {"lengths": cache["lengths"] + accept, "segs": new_segs}
+    if "tbl" in cache:
+        out["tbl"] = cache["tbl"]
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -671,9 +888,13 @@ def forward_step(params_segs: dict, x: jax.Array, cfg: ModelConfig, cache: dict,
     for seg in segments_in_range(cfg, lo, hi):
         seg_cache = cache["segs"][seg.name]
         x, new_c, cand, a = run_segment_step(
-            params_segs[seg.name], x, seg_cache, seg_cache, lengths, cfg, seg)
+            params_segs[seg.name], x, seg_cache, seg_cache, lengths, cfg, seg,
+            tbl=cache.get("tbl"))
         new_segs[seg.name] = {**seg_cache, **new_c}
         if cand:
             cands[seg.name] = cand
         aux = aux + a
-    return x, {"lengths": lengths, "segs": new_segs}, cands, aux
+    out = {"lengths": lengths, "segs": new_segs}
+    if "tbl" in cache:
+        out["tbl"] = cache["tbl"]
+    return x, out, cands, aux

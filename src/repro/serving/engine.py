@@ -18,6 +18,24 @@ the shared speculative block-step (``spec_block_step``):
 * per-request latency (arrival -> completion; see ``latency_percentiles``)
   and per-slot acceptance are tracked so drift and stragglers are observable.
 
+With ``kv_pages > 0`` the continuous scheduler runs over a **paged** KV
+cache (``repro.serving.kv_pool``): full-attention KV lives in a shared page
+pool, lanes hold block-table rows instead of worst-case contiguous regions,
+and scheduling becomes memory-aware:
+
+* **admission** checks the free-page watermark, not just a free lane — a
+  request is admitted when the pool can cover its prompt plus one
+  speculative block (later growth is on demand),
+* **growth**: before every block-step each live lane is topped up to cover
+  ``length + K + 2`` slots; pages are allocated only as sequences grow, so
+  short requests no longer pay for long ones,
+* **preempt-or-queue**: when the pool runs dry mid-decode, the newest lane
+  is preempted — its pages return to the pool, its progress (prompt +
+  generated prefix) is re-queued at the front of the FIFO and replayed via
+  prefill on re-admission, which is lossless for greedy decoding,
+* retirement frees the lane's pages (``reset_slot`` just unmaps the
+  block-table row; no KV bytes move).
+
 ``scheduler="sync"`` keeps the legacy batch-synchronous path (bucket by
 prompt length, decode a whole batch to completion with
 ``speculative_generate``) for comparison — ``benchmarks/serving_bench.py``
@@ -38,6 +56,7 @@ from repro.core import online as online_mod
 from repro.core import spec as spec_mod
 from repro.models import transformer as tfm
 from repro.models.model import Model
+from repro.serving.kv_pool import KVPool
 
 
 @dataclass
@@ -66,6 +85,8 @@ class _Slot:
     gen: List[int] = field(default_factory=list)
     blocks: int = 0
     wall_s: float = 0.0
+    cache_len: int = 0            # committed cache length (paged growth)
+    admit_seq: int = 0            # admission order (paged preemption picks max)
 
 
 @dataclass
@@ -85,11 +106,15 @@ class ServingEngine:
     mode: str = "full"
     eos_id: int = 1
     cache_len: int = 0            # continuous cache capacity (0 = derive)
+    kv_pages: int = 0             # >0: paged KV pool with this many pages
+    kv_page_size: int = 16        # tokens per page (paged mode)
+    kv_watermark: int = 0         # pages kept free at admission (paged mode)
     _queue: Dict[int, List[Request]] = field(default_factory=dict)
     _fifo: deque = field(default_factory=deque)
     stats: dict = field(default_factory=lambda: {
         "requests": 0, "blocks": 0, "committed": 0, "accepted": 0,
-        "drafted": 0, "updates": 0, "latencies": []})
+        "drafted": 0, "updates": 0, "preemptions": 0, "peak_live_slots": 0,
+        "latencies": []})
 
     def __post_init__(self):
         model, cfg = self.model, self.model.cfg
@@ -128,6 +153,23 @@ class ServingEngine:
 
         cap = self._cap
 
+        # paged KV pool: host-side ownership; block tables live in the cache
+        self.paged = self.kv_pages > 0
+        self._pool: Optional[KVPool] = None
+        self._admit_seq = 0
+        self._preempted: Dict[int, tuple] = {}   # uid -> (orig prompt, gen)
+        if self.paged:
+            if self.scheduler != "continuous":
+                raise ValueError("paged KV requires scheduler='continuous'")
+            self._pool = KVPool(self.kv_pages, self.kv_page_size)
+            self._mps = self._pool.pages_for(cap)      # block-table width
+            if self.kv_pages - self.kv_watermark < self._mps:
+                raise ValueError(
+                    f"kv_pages={self.kv_pages} minus watermark="
+                    f"{self.kv_watermark} cannot hold one worst-case request "
+                    f"({self._mps} pages of {self.kv_page_size}) — admission "
+                    f"would livelock")
+
         def admit(params, cache, pending, prompt, slot):
             _, pc, _ = model.prefill(params, prompt[None, :-1], max_len=cap)
             cache = tfm.insert_slot(cfg, cache, pc, slot)
@@ -136,6 +178,20 @@ class ServingEngine:
             return pending, cache
         self._admit_fn = jax.jit(admit)
 
+        def admit_paged(params, cache, pending, prompt, slot, row):
+            cache = tfm.map_slot_pages(cache, slot, row)
+            # prefill scratch is prompt-sized, not worst-case-sized: the
+            # splice through the block table is what lands it in the pool
+            _, pc, _ = model.prefill(params, prompt[None, :-1],
+                                     max_len=prompt.shape[0] - 1)
+            cache = tfm.insert_slot(cfg, cache, pc, slot)
+            pending = jax.lax.dynamic_update_slice_in_dim(
+                pending, prompt[-1:], slot, 0)
+            return pending, cache
+        self._admit_paged_fn = jax.jit(admit_paged)
+
+        self._map_fn = jax.jit(
+            lambda cache, slot, row: tfm.map_slot_pages(cache, slot, row))
         self._reset_fn = jax.jit(
             lambda cache, slot: tfm.reset_slot(cfg, cache, slot))
 
@@ -239,37 +295,134 @@ class ServingEngine:
     def active_slots(self) -> int:
         return sum(s is not None for s in self._slots)
 
-    def _admit_waiting(self) -> None:
-        """Prefill-on-arrival: splice queued requests into free lanes."""
+    def _trim_prompt(self, req: Request, remaining_new: int) -> np.ndarray:
+        """`remaining_new`: generation budget still outstanding — the full
+        max_new for fresh requests, minus tokens already generated for
+        re-queued preempted ones (whose prompt carries that prefix, so the
+        worst-case capacity check must not double-count it)."""
         cfg = self.model.cfg
+        prompt = np.asarray(req.prompt, np.int32)
+        if len(prompt) < 2:                  # need prefill + pending
+            prompt = np.concatenate(
+                [np.full(2 - len(prompt), prompt[0], np.int32), prompt])
+        # oversized prompts keep their suffix (mirrors the sync path's
+        # `_pad` truncation) rather than crashing the serving loop
+        limit = self._cap - remaining_new - cfg.dvi.k_spec - 2
+        if len(prompt) > limit:
+            prompt = prompt[-limit:]
+        return prompt
+
+    def _admit_waiting(self) -> None:
+        """Prefill-on-arrival: splice queued requests into free lanes.
+        Paged mode additionally gates admission on the free-page watermark:
+        the pool must cover the prompt plus one speculative block (decode
+        growth is allocated on demand, block by block)."""
+        cfg = self.model.cfg
+        K = cfg.dvi.k_spec
         while self._fifo and not all(s is not None for s in self._slots):
             slot = next(i for i, s in enumerate(self._slots) if s is None)
-            req = self._fifo.popleft()
-            prompt = np.asarray(req.prompt, np.int32)
-            if len(prompt) < 2:                  # need prefill + pending
-                prompt = np.concatenate(
-                    [np.full(2 - len(prompt), prompt[0], np.int32), prompt])
+            req = self._fifo[0]
             max_new = min(req.max_new, self.max_new)
-            # oversized prompts keep their suffix (mirrors the sync path's
-            # `_pad` truncation) rather than crashing the serving loop
-            limit = self._cap - max_new - cfg.dvi.k_spec - 2
-            if len(prompt) > limit:
-                prompt = prompt[-limit:]
+            gen_carry = len(self._preempted.get(req.uid, (None, ()))[1])
+            prompt = self._trim_prompt(req, max_new - gen_carry)
             if self._cache is None:
-                self._cache = self.model.init_cache(self.num_slots, self._cap)
-            self._pending, self._cache = self._admit_fn(
-                self.params, self._cache, self._pending,
-                jnp.asarray(prompt), jnp.int32(slot))
-            self._slots[slot] = _Slot(uid=req.uid, prompt=prompt,
-                                      max_new=max_new)
+                self._cache = (self.model.init_paged_cache(
+                    self.num_slots, self.kv_pages, self.kv_page_size,
+                    self._mps) if self.paged
+                    else self.model.init_cache(self.num_slots, self._cap))
+            if self.paged:
+                need = self._pool.pages_for(len(prompt) + K + 1)
+                if not self._pool.can_alloc(need, self.kv_watermark):
+                    break                    # head-of-line wait for pages
+                self._fifo.popleft()
+                pages = self._pool.alloc(need, owner=req.uid)
+                row = np.full(self._mps, -1, np.int32)
+                row[:len(pages)] = pages
+                self._pending, self._cache = self._admit_paged_fn(
+                    self.params, self._cache, self._pending,
+                    jnp.asarray(prompt), jnp.int32(slot), jnp.asarray(row))
+            else:
+                self._fifo.popleft()
+                self._pending, self._cache = self._admit_fn(
+                    self.params, self._cache, self._pending,
+                    jnp.asarray(prompt), jnp.int32(slot))
+            orig_prompt, gen0, blocks0, wall0 = self._preempted.pop(
+                req.uid, (prompt, [], 0, 0.0))
+            self._admit_seq += 1
+            self._slots[slot] = _Slot(uid=req.uid, prompt=orig_prompt,
+                                      max_new=max_new, gen=list(gen0),
+                                      blocks=blocks0, wall_s=wall0,
+                                      cache_len=len(prompt) - 1,
+                                      admit_seq=self._admit_seq)
             self._done[slot] = False
 
+    def _preempt(self, slot: int) -> None:
+        """Evict lane `slot` mid-decode: free its pages, unmap its row, and
+        re-queue its progress (prompt + generated prefix) at the FRONT of
+        the FIFO.  Re-admission replays the prefix via prefill — the same
+        tokens at the same positions produce the same KV, so greedy decoding
+        continues exactly where it stopped."""
+        st = self._slots[slot]
+        self._pool.free(st.uid)
+        # carry progress AND cost attribution (blocks, wall) across the
+        # preemption so Completion.mat / wall_s stay truthful
+        self._preempted[st.uid] = (st.prompt, list(st.gen), st.blocks,
+                                   st.wall_s)
+        combined = np.concatenate(
+            [st.prompt, np.asarray(st.gen, np.int32)]).astype(np.int32)
+        self._fifo.appendleft(Request(uid=st.uid, prompt=combined,
+                                      max_new=st.max_new))
+        self._cache = self._reset_fn(self._cache, jnp.int32(slot))
+        self._slots[slot] = None
+        self._done[slot] = True
+        self.stats["preemptions"] += 1
+
+    def _grow_pages(self) -> None:
+        """Top every live lane up to `cache_len + K + 2` slots of page
+        capacity before the block-step (the draft writes K+1 eager tokens at
+        positions len..len+K).  On pool exhaustion, preempt the NEWEST other
+        lane and retry — oldest requests keep their pages (no livelock:
+        admission guarantees any single request fits the pool)."""
+        K = self.model.cfg.dvi.k_spec
+        for s in sorted((i for i, st in enumerate(self._slots) if st is not None),
+                        key=lambda i: self._slots[i].admit_seq):
+            st = self._slots[s]
+            if st is None:
+                continue
+            while True:
+                have = len(self._pool.owned(st.uid))
+                need = self._pool.pages_for(st.cache_len + K + 2)
+                if need <= have:
+                    break
+                got = self._pool.alloc(need - have, owner=st.uid)
+                if got is None:
+                    victims = [i for i, v in enumerate(self._slots)
+                               if v is not None and i != s]
+                    if not victims:      # lone lane: admission sizing makes
+                        break            # this unreachable; fail soft
+                    self._preempt(max(victims,
+                                      key=lambda i: self._slots[i].admit_seq))
+                    continue
+                row = np.full(self._mps, -1, np.int32)
+                owned = self._pool.owned(st.uid)    # allocation order == logical
+                row[:len(owned)] = owned
+                self._cache = self._map_fn(self._cache, jnp.int32(s),
+                                           jnp.asarray(row))
+
     def _step_continuous(self) -> List[Completion]:
-        """One tick: admit arrivals, run ONE speculative block across all
-        lanes, retire finished lanes, maybe update the drafter."""
+        """One tick: admit arrivals, grow paged lanes (preempting if the
+        pool runs dry), run ONE speculative block across all lanes, retire
+        finished lanes, maybe update the drafter."""
+        # grow BEFORE admitting: admission then sees the true residual
+        # capacity, instead of grabbing pages that live lanes immediately
+        # claw back by preempting the just-admitted (newest) lane
+        if self.paged:
+            self._grow_pages()
         self._admit_waiting()
         if self.active_slots == 0:
             return []
+        self.stats["peak_live_slots"] = max(self.stats["peak_live_slots"],
+                                            self.active_slots)
         K = self.model.cfg.dvi.k_spec
         done = jnp.asarray(self._done)
         t0 = time.perf_counter()
@@ -290,6 +443,7 @@ class ServingEngine:
                 continue
             st.blocks += 1
             st.wall_s += wall_each
+            st.cache_len += int(acc_np[s])
             self.stats["blocks"] += 1
             self.stats["committed"] += int(acc_np[s])
             self.stats["accepted"] += int(m_np[s])
@@ -309,6 +463,8 @@ class ServingEngine:
                     st.uid, np.concatenate([st.prompt, gen]), gen,
                     len(st.gen) / max(st.blocks, 1), st.wall_s))
                 self.stats["requests"] += 1
+                if self.paged:
+                    self._pool.free(st.uid)   # copy-free eviction: pages
                 self._cache = self._reset_fn(self._cache, jnp.int32(s))
                 self._slots[s] = None
                 self._done[s] = True
@@ -351,6 +507,7 @@ class ServingEngine:
         drafter state, and live slots are untouched."""
         self.stats = {"requests": 0, "blocks": 0, "committed": 0,
                       "accepted": 0, "drafted": 0, "updates": 0,
+                      "preemptions": 0, "peak_live_slots": 0,
                       "latencies": []}
         self._slot_accepted[:] = 0
         self._slot_drafted[:] = 0
@@ -363,6 +520,17 @@ class ServingEngine:
     def slot_acceptance(self) -> np.ndarray:
         """(num_slots,) lifetime acceptance rate per lane."""
         return self._slot_accepted / np.maximum(self._slot_drafted, 1)
+
+    def kv_stats(self) -> dict:
+        """Paged-pool observability: utilization / watermark / fragmentation
+        plus scheduler-level preemption and concurrency counters."""
+        if not self.paged:
+            return {"paged": False}
+        live_tokens = sum(st.cache_len for st in self._slots if st is not None)
+        out = self._pool.utilization(live_tokens)
+        out.update(paged=True, preemptions=self.stats["preemptions"],
+                   peak_live_slots=self.stats["peak_live_slots"])
+        return out
 
     def latency_percentiles(self) -> dict:
         lats = self.stats["latencies"]

@@ -1,0 +1,170 @@
+"""Paged KV-cache page pool: fixed-size pages, per-slot block tables.
+
+Layout
+------
+The decode cache for full-attention segments is one **pooled** array per
+segment, ``(n_layers, P, page_size, KV, hd)``: ``P = num_pages + 1`` physical
+pages shared by every lane of the decode batch.  Physical page **0 is the
+null page** — the allocator never hands it out; block-table entries of ``-1``
+are clamped onto it so eager speculative writes from dead/retired lanes land
+somewhere harmless (null-page contents are garbage by construction and are
+always masked out of attention by position validity).
+
+Each lane owns a **block-table row** ``tbl[slot, :max_pages]`` (int32,
+``-1`` = unmapped): logical token position ``t`` of that lane lives at
+physical slot ``tbl[slot, t // page_size] * page_size + t % page_size``.
+The block table itself is a device array inside the cache pytree (it is
+read by every decode step); *ownership* — which physical pages belong to
+which request, the free list, watermarks — lives host-side in ``KVPool``,
+which is pure Python bookkeeping and never touches device memory.
+
+Rollback rule
+-------------
+Speculative writes are eager: a block-step writes K+1 tokens at positions
+``len .. len+K`` before verification.  Rejected tokens are rolled back by
+**truncating the lane length only** (``commit_cache`` advances ``lengths``
+by the accepted count) — no page is copied, freed, or zeroed; the stale
+slots are overwritten by the next block's eager writes and are excluded
+from attention by the ``pos <= qpos`` mask meanwhile.  Pages return to the
+free list only on retirement / preemption (``KVPool.free``).
+
+Invariants (checked by the property test in tests/test_paged_kv.py)
+-------------------------------------------------------------------
+* a physical page is owned by at most one owner at a time,
+* ``free_pages + pages_in_use == num_pages`` at every step,
+* ``alloc`` is all-or-nothing (no partial grants),
+* double-``free`` and foreign-page frees raise.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Pages needed to hold `tokens` cache slots (ceil division, min 1)."""
+    return max(1, -(-tokens // page_size))
+
+
+def logical_to_physical(tbl, pos, page_size: int):
+    """THE addressing rule: map logical token positions to physical pool
+    slots through a block table.  tbl (..., MPS) int32 (-1 = unmapped);
+    pos (..., L) int32 logical positions with matching leading dims.
+    Returns (page, phys): the owning page id per position (-1 where
+    unmapped or beyond the table) and the flat physical slot index, with
+    invalid positions clamped onto the null page 0.  jnp-traceable — this
+    one function is shared by the decode step, the slot splice, and the
+    kernel oracle so the layout can never silently diverge."""
+    mps = tbl.shape[-1]
+    pidx = pos // page_size
+    page = jnp.where(pidx < mps,
+                     jnp.take_along_axis(tbl, jnp.clip(pidx, 0, mps - 1),
+                                         axis=-1), -1)
+    phys = jnp.where(page < 0, 0, page) * page_size + pos % page_size
+    return page, phys
+
+
+@dataclass
+class KVPool:
+    """Host-side free-list allocator over physical page ids ``1..num_pages``.
+
+    Page id 0 (the null page) is reserved at construction and never
+    allocated.  ``alloc`` grants the lowest-numbered free pages
+    (deterministic, keeps tests reproducible); fixed-size pages mean the
+    pool has no external fragmentation — the only waste is the unused tail
+    of each owner's last page (see ``utilization``).
+    """
+    num_pages: int
+    page_size: int
+    _free: List[int] = field(init=False)
+    _owned: Dict[int, List[int]] = field(init=False, default_factory=dict)
+    peak_used: int = field(init=False, default=0)
+    alloc_calls: int = field(init=False, default=0)
+    free_calls: int = field(init=False, default=0)
+    failed_allocs: int = field(init=False, default=0)
+
+    def __post_init__(self):
+        if self.num_pages < 1:
+            raise ValueError("KVPool needs at least one allocatable page")
+        if self.page_size < 1:
+            raise ValueError("page_size must be positive")
+        # ascending grant order: keep as a reversed stack so pop() is O(1)
+        self._free = list(range(self.num_pages, 0, -1))
+
+    # ---------------- capacity queries ----------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def pages_for(self, tokens: int) -> int:
+        return pages_for(tokens, self.page_size)
+
+    def can_alloc(self, n: int, watermark: int = 0) -> bool:
+        """Would an ``alloc(n)`` succeed while keeping `watermark` pages free?"""
+        return self.free_pages - n >= watermark
+
+    # ---------------- alloc / free ----------------
+
+    def alloc(self, n: int, owner: int) -> Optional[List[int]]:
+        """Grant `n` pages to `owner` (all-or-nothing).  Returns the page ids
+        (ascending) or None if the pool cannot satisfy the request."""
+        self.alloc_calls += 1
+        if n < 0:
+            raise ValueError("cannot allocate a negative page count")
+        if n > len(self._free):
+            self.failed_allocs += 1
+            return None
+        got = [self._free.pop() for _ in range(n)]
+        self._owned.setdefault(owner, []).extend(got)
+        self.peak_used = max(self.peak_used, self.used_pages)
+        return got
+
+    def free(self, owner: int) -> int:
+        """Return ALL of `owner`'s pages to the free list (retirement or
+        preemption).  Returns the number of pages released."""
+        self.free_calls += 1
+        pages = self._owned.pop(owner, None)
+        if pages is None:
+            raise KeyError(f"owner {owner} holds no pages (double free?)")
+        for p in pages:
+            if p in self._free:          # pragma: no cover - invariant guard
+                raise RuntimeError(f"page {p} already free")
+        self._free.extend(sorted(pages, reverse=True))
+        return len(pages)
+
+    def owned(self, owner: int) -> List[int]:
+        return list(self._owned.get(owner, ()))
+
+    def owners(self) -> List[int]:
+        return list(self._owned)
+
+    # ---------------- observability ----------------
+
+    def utilization(self, live_tokens: int = -1) -> dict:
+        """Pool stats.  `live_tokens` (sum of committed lane lengths) turns
+        the page-internal slack into a fragmentation ratio; pass -1 to skip."""
+        used = self.used_pages
+        out = {
+            "num_pages": self.num_pages,
+            "page_size": self.page_size,
+            "used_pages": used,
+            "free_pages": self.free_pages,
+            "peak_used_pages": self.peak_used,
+            "utilization": used / self.num_pages,
+            "peak_utilization": self.peak_used / self.num_pages,
+            "alloc_calls": self.alloc_calls,
+            "free_calls": self.free_calls,
+            "failed_allocs": self.failed_allocs,
+        }
+        if live_tokens >= 0:
+            cap = used * self.page_size
+            out["internal_fragmentation"] = (
+                0.0 if cap == 0 else 1.0 - live_tokens / cap)
+        return out

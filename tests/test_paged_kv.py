@@ -1,0 +1,283 @@
+"""Paged KV subsystem: (1) paged-vs-contiguous generation is TOKEN-IDENTICAL
+— greedy and rejection-sampled — across attn / sliding-window-ring / SSD /
+RG-LRU mixers; (2) the page pool's alloc/free invariants hold under random
+op sequences (no leak, no double-grant); (3) the continuous engine over the
+paged pool is lossless even when scarcity forces preemption; (4) at equal
+token-memory the paged scheduler admits strictly more concurrent requests
+than contiguous worst-case reservation can."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import tiny_cfg
+from repro.configs.base import DVIConfig
+from repro.core import lora, online, spec
+from repro.models.model import build_model
+import repro.models.transformer as tfm
+from repro.serving import Request, ServingEngine
+from repro.serving.kv_pool import KVPool, pages_for
+
+SURGERY_ARCHS = ["vicuna-7b", "swa-ring", "mamba2-370m", "recurrentgemma-9b"]
+
+
+def _build(name):
+    if name == "swa-ring":
+        cfg = tiny_cfg("qwen3-0.6b").replace(
+            name="swa-ring", sliding_window=16, global_attn_every=0,
+            num_layers=2, dvi=DVIConfig(split_layer=1, k_spec=3, lora_rank=8,
+                                        buffer_slots=256, batch_size=32))
+    else:
+        cfg = tiny_cfg(name)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dvi = lora.init_draft_params(jax.random.PRNGKey(5), cfg)
+    return cfg, model, params, dvi
+
+
+def _grow(cache, pool, lanes_needed, ps, mps):
+    """Engine-style on-demand growth: top each lane up to `lanes_needed[b]`
+    token capacity.  Round-robin across lanes so physical pages interleave —
+    the strongest layout for catching indexing bugs."""
+    for b, need_tokens in enumerate(lanes_needed):
+        need = pages_for(need_tokens, ps)
+        have = len(pool.owned(b))
+        if need > have:
+            got = pool.alloc(need - have, owner=b)
+            assert got is not None, "test pool sized too small"
+            row = np.full(mps, -1, np.int32)
+            owned = pool.owned(b)
+            row[:len(owned)] = owned
+            cache = tfm.map_slot_pages(cache, jnp.int32(b), jnp.asarray(row))
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# 1) paged == contiguous, token for token
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", SURGERY_ARCHS)
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_paged_matches_contiguous_stream(name, temperature):
+    """Same model, same prompts, same PRNG keys: the committed streams of
+    the paged and contiguous caches must agree block by block — greedy
+    (argmax) and rejection-sampled (Leviathan) alike."""
+    cfg, model, params, dvi = _build(name)
+    K = cfg.dvi.k_spec
+    B, Tp, ps, mps = 3, 8, 4, 16
+    pool = KVPool(num_pages=3 * mps, page_size=ps)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, Tp), 2,
+                                 cfg.vocab_size)
+
+    _, c_cache, _ = model.prefill(params, prompts[:, :-1], max_len=64)
+    c_pending = prompts[:, -1]
+
+    p_cache = model.init_paged_cache(B, pool.num_pages, ps, mps)
+    p_cache = _grow(p_cache, pool, [Tp - 1 + K + 2] * B, ps, mps)
+    for b in range(B):
+        _, pc, _ = model.prefill(params, prompts[b:b + 1, :-1],
+                                 max_len=Tp - 1)
+        p_cache = tfm.insert_slot(cfg, p_cache, pc, jnp.int32(b))
+    p_pending = prompts[:, -1]
+
+    ck = pk = jax.random.PRNGKey(42)
+    lens = [Tp - 1] * B
+    for i in range(5):
+        p_cache = _grow(p_cache, pool, [t + K + 2 for t in lens], ps, mps)
+        cb = spec.spec_block_step(model, params, dvi, c_pending, c_cache,
+                                  temperature=temperature, key=ck)
+        pb = spec.spec_block_step(model, params, dvi, p_pending, p_cache,
+                                  temperature=temperature, key=pk)
+        c_pending, c_cache, ck = cb.pending, cb.cache, cb.key
+        p_pending, p_cache, pk = pb.pending, pb.cache, pb.key
+        np.testing.assert_array_equal(np.asarray(cb.accept),
+                                      np.asarray(pb.accept),
+                                      err_msg=f"{name} block {i}")
+        for b in range(B):
+            np.testing.assert_array_equal(
+                np.asarray(cb.commit_vec[b, :int(cb.accept[b])]),
+                np.asarray(pb.commit_vec[b, :int(pb.accept[b])]),
+                err_msg=f"{name} block {i} lane {b}")
+        lens = [t + int(cb.accept[b]) for b, t in enumerate(lens)]
+
+
+def test_reset_slot_unmaps_paged_lane():
+    cfg, model, params, dvi = _build("vicuna-7b")
+    B, ps, mps = 2, 4, 8
+    pool = KVPool(num_pages=16, page_size=ps)
+    cache = model.init_paged_cache(B, pool.num_pages, ps, mps)
+    cache = _grow(cache, pool, [10, 10], ps, mps)
+    assert (np.asarray(cache["tbl"])[0] >= 0).sum() == pages_for(10, ps)
+    cache = tfm.reset_slot(cfg, cache, jnp.int32(0))
+    tbl = np.asarray(cache["tbl"])
+    assert (tbl[0] == -1).all(), "evicted lane still mapped"
+    assert (tbl[1] >= 0).sum() == pages_for(10, ps), "other lane touched"
+    assert int(cache["lengths"][0]) == 0
+
+
+# ---------------------------------------------------------------------------
+# 2) pool alloc/free invariants (property test)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30)
+@given(st.lists(st.integers(0, 999), min_size=1, max_size=80))
+def test_kv_pool_invariants(ops_seq):
+    """Random alloc/free interleavings never leak, double-grant, or
+    mis-count: every page is either free or owned by exactly one owner, and
+    conservation holds after every operation."""
+    N = 13
+    pool = KVPool(num_pages=N, page_size=4)
+    owners = []
+    next_uid = 0
+    for op in ops_seq:
+        if op % 3 == 0 and owners:              # free a random owner
+            uid = owners.pop(op % len(owners))
+            freed = pool.free(uid)
+            assert freed >= 0
+            with pytest.raises(KeyError):       # double free always raises
+                pool.free(uid)
+        else:                                    # alloc 0..5 pages
+            n = op % 6
+            free_before = pool.free_pages
+            got = pool.alloc(n, owner=next_uid)
+            if n > free_before:
+                assert got is None, "alloc must be all-or-nothing"
+            else:
+                assert got is not None and len(got) == n
+                if next_uid not in owners:
+                    owners.append(next_uid)
+                next_uid += 1
+        # conservation + exclusivity after EVERY op
+        all_owned = [p for uid in pool.owners() for p in pool.owned(uid)]
+        assert len(all_owned) == len(set(all_owned)), "page double-granted"
+        assert all(1 <= p <= N for p in all_owned), "page id out of range"
+        assert pool.free_pages + len(all_owned) == N, "pages leaked"
+        assert pool.peak_used >= pool.used_pages
+
+
+def test_kv_pool_watermark_and_frag():
+    pool = KVPool(num_pages=10, page_size=8)
+    pool.alloc(4, owner=1)
+    pool.alloc(3, owner=2)
+    assert pool.peak_used == 7
+    pool.free(1)
+    assert pool.free_pages == 7 and pool.peak_used == 7
+    assert not pool.can_alloc(8)
+    assert pool.can_alloc(7) and not pool.can_alloc(7, watermark=1)
+    u = pool.utilization(live_tokens=20)        # 3 pages * 8 slots cover 20
+    assert u["used_pages"] == 3
+    assert u["internal_fragmentation"] == pytest.approx(1 - 20 / 24)
+
+
+# ---------------------------------------------------------------------------
+# 3) engine over the paged pool: lossless, even under preemption
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def backbone():
+    cfg = tiny_cfg("vicuna-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        Tp = int(rng.choice([6, 9, 12]))
+        mn = int(rng.choice([6, 10, 16]))
+        p = np.asarray(jax.random.randint(jax.random.PRNGKey(100 + i), (Tp,),
+                                          2, cfg.vocab_size), np.int32)
+        reqs.append(Request(uid=i, prompt=p, max_new=mn))
+    return reqs
+
+
+def _ar_reference(model, params, req, eos=1):
+    r = spec.ar_generate(model, params, jnp.asarray(req.prompt)[None, :],
+                         req.max_new)
+    gen = np.asarray(r.tokens[0, len(req.prompt):int(r.lengths[0])]).tolist()
+    out = []
+    for t in gen[:req.max_new]:
+        out.append(int(t))
+        if t == eos:
+            break
+    return out
+
+
+@pytest.mark.parametrize("kv_pages,expect_preempt", [(40, False), (14, True)])
+def test_engine_paged_lossless(backbone, kv_pages, expect_preempt):
+    """Paged continuous serving emits EXACTLY the per-request greedy AR
+    stream — with an ample pool, and with a pool so tight that lanes are
+    preempted mid-decode and replayed."""
+    cfg, model, params = backbone
+    reqs = _requests(cfg, 7)
+    state = online.init_trainer(model, jax.random.PRNGKey(3))
+    eng = ServingEngine(model, params, state, scheduler="continuous",
+                        num_slots=3, max_new=16, cache_len=40,
+                        kv_pages=kv_pages, kv_page_size=4)
+    for r in reqs:
+        eng.submit(r)
+    outs = eng.run(max_steps=1000)
+    assert len(outs) == len(reqs)
+    assert not eng.busy
+    by_uid = {o.uid: o for o in outs}
+    for req in reqs:
+        ref = _ar_reference(model, params, req)
+        got = by_uid[req.uid].gen_tokens.tolist()
+        assert got == ref, f"uid {req.uid}: {got} != AR {ref}"
+        np.testing.assert_array_equal(
+            by_uid[req.uid].tokens[:len(req.prompt)], req.prompt)
+    kv = eng.kv_stats()
+    if expect_preempt:
+        assert kv["preemptions"] > 0, "tight pool should force preemption"
+    assert kv["used_pages"] == 0, "retirement must free every page"
+    assert kv["peak_used_pages"] <= kv_pages
+
+
+def test_engine_paged_rejects_bad_config(backbone):
+    cfg, model, params = backbone
+    state = online.init_trainer(model, jax.random.PRNGKey(3))
+    with pytest.raises(ValueError):              # sync scheduler has no pool
+        ServingEngine(model, params, state, scheduler="sync", kv_pages=8)
+    with pytest.raises(ValueError):              # one request must fit
+        ServingEngine(model, params, state, scheduler="continuous",
+                      cache_len=40, kv_pages=2, kv_page_size=4)
+
+
+# ---------------------------------------------------------------------------
+# 4) equal memory -> strictly more admitted concurrency than contiguous
+# ---------------------------------------------------------------------------
+
+def test_paged_admits_more_concurrent_at_equal_memory(backbone):
+    """Token-memory budget of 80 slots: contiguous worst-case reservation
+    fits 2 lanes of 40; the paged pool (20 pages x 4) runs 6 lanes and must
+    keep strictly more than 2 requests live at once — with zero output
+    divergence."""
+    cfg, model, params = backbone
+    reqs = [Request(uid=i, prompt=np.asarray(
+        jax.random.randint(jax.random.PRNGKey(200 + i), (6,), 2,
+                           cfg.vocab_size), np.int32), max_new=4)
+            for i in range(6)]
+
+    def run(**kw):
+        state = online.init_trainer(model, jax.random.PRNGKey(3))
+        eng = ServingEngine(model, params, state, scheduler="continuous",
+                            max_new=4, cache_len=40, **kw)
+        for r in reqs:
+            eng.submit(r)
+        outs = eng.run(max_steps=1000)
+        assert len(outs) == len(reqs)
+        return eng, {o.uid: o.gen_tokens.tolist() for o in outs}
+
+    eng_c, out_c = run(num_slots=2)                       # 2 x 40 = 80 slots
+    eng_p, out_p = run(num_slots=6, kv_pages=20, kv_page_size=4)   # 80 slots
+    assert out_c == out_p, "paged output diverged from contiguous"
+    assert eng_c.stats["peak_live_slots"] <= 2
+    assert eng_p.stats["peak_live_slots"] > 2, (
+        "paged pool should admit more concurrent requests than contiguous "
+        "worst-case reservation at equal memory")
+    # more lanes live at once -> the same work takes fewer engine ticks
+    assert eng_p.stats["blocks"] >= eng_c.stats["blocks"]
