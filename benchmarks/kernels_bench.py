@@ -58,6 +58,27 @@ def main():
         q, kp, vp, lens, tbl)).max())
     emit("kernel/paged_decode_attention", t * 1e6, f"max_err={err:.2e}")
 
+    # per-lane page early-out: SHORT lanes (here 1 of 16 pages ≈ 6% of
+    # max_pages) should stop paying the full page-axis sweep.  Time the
+    # trimmed kernel (page_counts from lengths, the default) against the
+    # same kernel forced to sweep every page (page_counts = max_pages) —
+    # identical outputs, the difference is pure skipped work.
+    B, mps = 4, 16
+    perm = np.random.default_rng(1).permutation(B * mps) + 1
+    tbl_s = jnp.asarray(perm.reshape(B, mps).astype(np.int32))
+    kp_s = jax.random.normal(jax.random.PRNGKey(12), (B * mps + 1, ps, 4, 64))
+    vp_s = jax.random.normal(jax.random.PRNGKey(13), (B * mps + 1, ps, 4, 64))
+    short = jnp.full((B,), ps)                       # 1 page of 16 per lane
+    full_pc = jnp.full((B,), mps, jnp.int32)
+    t_trim, o_trim = timed(lambda: paged_decode_attention(
+        q, kp_s, vp_s, short, tbl_s, interpret=True))
+    t_full, o_full = timed(lambda: paged_decode_attention(
+        q, kp_s, vp_s, short, tbl_s, page_counts=full_pc, interpret=True))
+    err = float(jnp.abs(o_trim - o_full).max())
+    emit("kernel/paged_decode_early_out", t_trim * 1e6,
+         f"full_sweep_us={t_full * 1e6:.0f} "
+         f"speedup={t_full / max(t_trim, 1e-12):.2f}x max_err={err:.2e}")
+
     xh = jax.random.normal(jax.random.PRNGKey(7), (2, 128, 8, 32))
     Bc = jax.random.normal(jax.random.PRNGKey(8), (2, 128, 1, 64)) * 0.5
     Cc = jax.random.normal(jax.random.PRNGKey(9), (2, 128, 1, 64)) * 0.5

@@ -1,26 +1,34 @@
 """Serving-scheduler benchmark: sync (batch) vs continuous (slot) batching
-— and optionally the paged-KV continuous scheduler — on the SAME Poisson
-arrival trace: throughput, tail latency, and memory efficiency.
+— per-block and fused-superstep — and optionally the paged-KV continuous
+scheduler, all on the SAME Poisson arrival trace: throughput, tail latency,
+dispatch/host-overhead breakdown, and memory efficiency.
 
 The sync scheduler buckets requests, pads the batch, and decodes everyone to
 completion before admitting new work, so one long request holds the batch
 hostage (head-of-line blocking) and arrivals wait for the next batch
-boundary.  The continuous scheduler retires and admits per-slot every block,
-so short requests stream out under long ones.  The ``--paged`` arm keeps
-the continuous scheduler but swaps worst-case per-lane cache reservations
-for the shared page pool at the SAME token-memory budget — which buys twice
-the decode lanes, so it admits more concurrent requests per byte (the
-``admitted_per_gb`` column).  All arms run the same unified
-``spec_block_step`` core with online drafter updates.
+boundary.  The continuous scheduler retires and admits per-slot, so short
+requests stream out under long ones.  The ``continuous-fused`` arm keeps
+the same scheduler but fuses ``--sync-every`` speculative blocks into one
+device dispatch (``spec_superstep``): EOS/budget/commit handling moves
+in-graph and the host syncs once per superstep instead of once per block —
+the per-arm records carry the breakdown (blocks/s, host-sync count per 100
+blocks, host wait fraction) and the bench asserts the two arms' token
+streams are IDENTICAL (the fusion is lossless by construction).  The
+``--paged`` arm runs the fused scheduler over the shared page pool at the
+SAME token-memory budget — which buys twice the decode lanes, so it admits
+more concurrent requests per byte (the ``admitted_per_gb`` column).  All
+arms run the same unified ``spec_block_step`` core with online drafter
+updates.
 
   PYTHONPATH=src python benchmarks/serving_bench.py            # full
   PYTHONPATH=src python benchmarks/serving_bench.py --smoke    # CI job
   PYTHONPATH=src python benchmarks/serving_bench.py --paged --json out.json
 
 Output: one CSV-ish line per scheduler:
-  scheduler,requests,gen_tokens,tok_per_s,p50_ms,p95_ms,acceptance
+  scheduler,requests,gen_tokens,tok_per_s,blocks_per_s,p50_ms,p95_ms,acceptance
 plus (``--json``) a machine-readable record per arm with pool utilization /
-preemption / concurrency stats for bench-trajectory tracking in CI.
+preemption / concurrency / dispatch stats for bench-trajectory tracking in
+CI.
 """
 from __future__ import annotations
 
@@ -77,6 +85,7 @@ def run_trace(scheduler, model, params, trace, num_slots, batch_size,
     eng.reset_stats()
     done = []
     i = 0
+    busy_s = 0.0                               # engine time, arrival idle out
     t0 = time.perf_counter()
     while i < len(trace) or eng.busy:
         now = time.perf_counter() - t0
@@ -87,22 +96,39 @@ def run_trace(scheduler, model, params, trace, num_slots, batch_size,
             if i < len(trace):                 # idle until the next arrival
                 time.sleep(min(trace[i][0] - now, 0.01))
             continue
+        ts = time.perf_counter()
         done.extend(eng.step())
+        busy_s += time.perf_counter() - ts
     makespan = time.perf_counter() - t0
-    return eng, done, makespan
+    return eng, done, makespan, busy_s
 
 
-def report(name, eng, done, makespan, token_budget=0):
+def report(name, eng, done, makespan, busy_s, token_budget=0):
     toks = sum(len(c.gen_tokens) for c in done)
     lat = eng.latency_percentiles()
+    # dispatch rate over ENGINE-BUSY time: arrival-gap idling is workload
+    # idleness, not scheduler speed, and would dilute every arm equally.
+    # `steps` (scheduler iterations = batch block-steps) is the unit the
+    # superstep fusion accelerates — every iteration runs the same batched
+    # compute; fusing amortizes dispatch + host sync across sync_every of
+    # them.  Per-live-lane `blocks` stays in the record for MAT/acceptance.
+    steps = eng.stats["steps"] or eng.stats["blocks"]   # sync arm: lane-blocks
+    blocks_per_s = steps / max(busy_s, 1e-9)
     print(f"{name},{len(done)},{toks},{toks / makespan:.1f},"
-          f"{lat['p50_s'] * 1e3:.0f},{lat['p95_s'] * 1e3:.0f},"
-          f"{eng.acceptance:.3f}")
+          f"{blocks_per_s:.1f},{lat['p50_s'] * 1e3:.0f},"
+          f"{lat['p95_s'] * 1e3:.0f},{eng.acceptance:.3f}")
     rec = {"scheduler": name, "requests": len(done), "gen_tokens": toks,
            "tok_per_s": toks / makespan, "p50_ms": lat["p50_s"] * 1e3,
            "p95_ms": lat["p95_s"] * 1e3, "acceptance": eng.acceptance,
            "peak_live_slots": eng.stats.get("peak_live_slots", 0),
-           "num_slots": eng.num_slots}
+           "num_slots": eng.num_slots,
+           "blocks": eng.stats["blocks"], "steps": steps,
+           "makespan_s": makespan, "busy_s": busy_s,
+           "blocks_per_s": blocks_per_s,
+           "lane_blocks_per_s": eng.stats["blocks"] / max(busy_s, 1e-9),
+           "host_wait_frac": eng.stats["sync_wait_s"] / max(busy_s, 1e-9)}
+    if eng.scheduler == "continuous":
+        rec["dispatch"] = eng.dispatch_stats()
     if token_budget:
         gb = token_budget * kv_bytes_per_token(eng.model.cfg) / 2**30
         rec["kv_budget_tokens"] = token_budget
@@ -110,6 +136,10 @@ def report(name, eng, done, makespan, token_budget=0):
     if eng.paged:
         rec["kv"] = eng.kv_stats()
     return rec
+
+
+def streams(done):
+    return {c.uid: c.gen_tokens.tolist() for c in done}
 
 
 def main():
@@ -124,6 +154,8 @@ def main():
     ap.add_argument("--requests", type=int, default=0)
     ap.add_argument("--rate", type=float, default=0.0, help="arrivals/sec")
     ap.add_argument("--num-slots", type=int, default=8)
+    ap.add_argument("--sync-every", type=int, default=8,
+                    help="blocks fused per device sync in the fused arm")
     ap.add_argument("--kv-page-size", type=int, default=8)
     ap.add_argument("--kv-pages", type=int, default=0,
                     help="paged arm pool size (0 = match contiguous memory)")
@@ -131,9 +163,14 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.sync_every < 2:
+        ap.error("--sync-every must be >= 2: the per-block `continuous` arm "
+                 "already runs sync_every=1, so a fused arm below 2 would "
+                 "duplicate it")
     n = args.requests or (8 if args.smoke else 48)
     pre = 40 if args.smoke else 250
     slots = min(args.num_slots, 4) if args.smoke else args.num_slots
+    S = args.sync_every
     cfg, model, params, tasks = bench_backbone(pretrain_steps=pre,
                                                seed=args.seed)
     # warm-up requests: continuous admission jit-specializes per prompt
@@ -145,27 +182,47 @@ def main():
 
     rate = args.rate or (4.0 if args.smoke else 2.0)
     trace = build_trace(n, rate, tasks, cfg.vocab_size, seed=args.seed)
-    print("scheduler,requests,gen_tokens,tok_per_s,p50_ms,p95_ms,acceptance")
+    print("scheduler,requests,gen_tokens,tok_per_s,blocks_per_s,"
+          "p50_ms,p95_ms,acceptance")
     # contiguous cap per lane (mirror of ServingEngine.__post_init__)
     cap = (max(PROMPT_LENS) + max(MAX_NEWS) + cfg.dvi.k_spec + 2
            + tfm.RING_SLACK)
     budget = slots * cap                       # token-slots both arms share
+    c1 = run_trace("continuous", model, params, trace, slots, args.batch,
+                   warm=warm, engine_kw={"sync_every": 1})
+    cS = run_trace("continuous", model, params, trace, slots, args.batch,
+                   warm=warm, engine_kw={"sync_every": S})
     recs = [report("sync", *run_trace("sync", model, params, trace, slots,
                                       args.batch, warm=warm), budget),
-            report("continuous", *run_trace(
-                "continuous", model, params, trace, slots, args.batch,
-                warm=warm), budget)]
+            report("continuous", *c1, budget),
+            report(f"continuous-fused-s{S}", *cS, budget)]
     s_tp, s_p95 = recs[0]["tok_per_s"], recs[0]["p95_ms"]
     c_tp, c_p95 = recs[1]["tok_per_s"], recs[1]["p95_ms"]
     print(f"# continuous vs sync: {c_tp / max(s_tp, 1e-9):.2f}x throughput, "
           f"{s_p95 / max(c_p95, 1e-9):.2f}x lower p95")
+
+    # fused vs per-block: dispatch/host-overhead breakdown + losslessness
+    match = streams(c1[1]) == streams(cS[1])
+    d1, dS = recs[1]["dispatch"], recs[2]["dispatch"]
+    sync_cut = (d1["host_syncs_per_100_blocks"]
+                / max(dS["host_syncs_per_100_blocks"], 1e-9))
+    fused_speedup = recs[2]["blocks_per_s"] / max(recs[1]["blocks_per_s"],
+                                                  1e-9)
+    print(f"# fused(s={S}) vs per-block: {fused_speedup:.2f}x blocks/s, "
+          f"host-syncs/100blk {d1['host_syncs_per_100_blocks']:.1f} -> "
+          f"{dS['host_syncs_per_100_blocks']:.1f} ({sync_cut:.1f}x fewer), "
+          f"host_wait {recs[1]['host_wait_frac']:.2f} -> "
+          f"{recs[2]['host_wait_frac']:.2f}, streams_match={match}")
+    summary = {"fused_speedup_blocks_per_s": fused_speedup,
+               "host_sync_reduction": sync_cut, "streams_match": match}
 
     if args.paged:
         pages = args.kv_pages or pages_for(budget, args.kv_page_size)
         recs.append(report("paged", *run_trace(
             "continuous", model, params, trace, 2 * slots, args.batch,
             warm=warm, engine_kw={"kv_pages": pages,
-                                  "kv_page_size": args.kv_page_size}),
+                                  "kv_page_size": args.kv_page_size,
+                                  "sync_every": S}),
             pages * args.kv_page_size))
         p = recs[-1]
         print(f"# paged vs continuous (equal kv memory, 2x lanes): "
@@ -178,10 +235,17 @@ def main():
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"arms": recs, "requests": n, "rate_hz": rate,
+                       "sync_every": S, "fused": summary,
                        "backbone": cfg.name,
                        "kv_bytes_per_token": kv_bytes_per_token(cfg)}, f,
                       indent=2)
         print(f"# wrote {args.json}")
+
+    # the fusion is lossless BY CONSTRUCTION — a divergence is a
+    # correctness regression, not a perf data point; fail the run (and CI)
+    if not match:
+        raise SystemExit("FATAL: fused token streams diverged from the "
+                         "per-block scheduler")
 
 
 if __name__ == "__main__":

@@ -56,6 +56,24 @@ class GenResult(NamedTuple):
     buffer: Optional[dict]
 
 
+class SuperstepResult(NamedTuple):
+    """Result of a fused run of up to ``steps`` speculative blocks (one
+    device dispatch, one host sync).  ``gen_buf[:, :gen_count]`` holds the
+    tokens committed THIS superstep (per lane, already EOS/budget-capped);
+    the per-lane counters summarize what the host would have accumulated
+    block by block."""
+    pending: jax.Array         # (B,) next pending token
+    done: jax.Array            # (B,) bool — includes in-graph EOS/budget exits
+    gen_buf: jax.Array         # (B, steps*(K+1)) committed tokens, capped
+    gen_count: jax.Array       # (B,) valid prefix length of gen_buf
+    lane_blocks: jax.Array     # (B,) blocks the lane was live for
+    lane_committed: jax.Array  # (B,) cache advance (sum of accepts)
+    lane_accepted: jax.Array   # (B,) accepted drafted tokens (sum of m)
+    cache: dict                # advanced decode cache
+    buffer: Optional[dict]     # replay buffer with this superstep's tuples
+    key: jax.Array             # threaded PRNG key (sampling path)
+
+
 class BlockStep(NamedTuple):
     """Result of ONE speculative block (draft K+1, verify once, commit m+1)."""
     pending: jax.Array         # (B,) next pending token (unchanged where done)
@@ -212,6 +230,89 @@ def log_block_tuples(cfg, buf: dict, step: BlockStep, prev_pending: jax.Array,
         jnp.broadcast_to(i_idx[None], (B, K)).reshape(B * K),
         prev.reshape(B * K),
         valid.reshape(B * K))
+
+
+def spec_superstep(model: Model, params: dict, dvi_params: dict,
+                   pending: jax.Array, cache: dict, *, steps: int,
+                   done: Optional[jax.Array] = None,
+                   budget: Optional[jax.Array] = None,
+                   eos_id: int = 1,
+                   buf: Optional[dict] = None,
+                   collect: bool = False,
+                   k_spec: Optional[int] = None,
+                   temperature: float = 0.0,
+                   key: Optional[jax.Array] = None) -> SuperstepResult:
+    """Fused multi-block tick: run up to ``steps`` speculative blocks inside
+    one ``jax.lax.while_loop`` so the serving engine syncs with the device
+    once per superstep instead of once per block.
+
+    Everything the per-block host loop did between dispatches happens
+    in-graph: committed tokens are appended to a per-lane buffer with the
+    exact sequential semantics of the host loop (stop at the lane's
+    remaining ``budget``; stop just after the first EOS), lanes flip their
+    ``done`` flag the block they exhaust budget or emit EOS (masking them
+    out of every later block: accept = 0, cache untouched, no tuples), and
+    per-lane block/commit/accept counters accumulate so host stats need only
+    the compact summary.  The loop exits early once every lane is done.
+
+    ``budget``: (B,) int32 REMAINING generation budget per lane (max_new
+    minus tokens already emitted in earlier supersteps).  The committed
+    stream across supersteps is bit-identical to per-block ticking — the
+    only behavioural difference is that retirement/admission happen at
+    superstep boundaries (a finished lane rides along masked until the
+    host next harvests)."""
+    cfg = model.cfg
+    K = cfg.dvi.k_spec if k_spec is None else k_spec
+    B = pending.shape[0]
+    key = key if key is not None else jax.random.PRNGKey(0)
+    done = jnp.zeros((B,), bool) if done is None else done
+    budget = (jnp.full((B,), jnp.iinfo(jnp.int32).max // 2, jnp.int32)
+              if budget is None else budget.astype(jnp.int32))
+    if collect and buf is None:
+        buf = buffer_mod.init_buffer(cfg)
+    cap = steps * (K + 1)
+    ar = jnp.arange(K + 1)
+    lane = jnp.arange(B)
+    zeros = jnp.zeros((B,), jnp.int32)
+
+    def body(carry):
+        (i, pending, done, gen_buf, gen_count, blocks, committed, accepted,
+         cache, buf, key) = carry
+        live = (~done).astype(jnp.int32)
+        blk = spec_block_step(model, params, dvi_params, pending, cache,
+                              k_spec=K, done=done, temperature=temperature,
+                              key=key)
+        # sequential commit semantics, vectorized: candidate positions are
+        # the accepted prefix that still fits the lane budget; an EOS among
+        # them is written and stops everything after it
+        can = ((ar[None, :] < blk.accept[:, None])
+               & (gen_count[:, None] + ar[None, :] < budget[:, None]))
+        hit_eos = can & (blk.commit_vec == eos_id)
+        eos_before = jnp.cumsum(hit_eos.astype(jnp.int32), axis=1) \
+            - hit_eos.astype(jnp.int32)
+        written = can & (eos_before == 0)
+        dest = jnp.where(written,
+                         lane[:, None] * cap + gen_count[:, None] + ar[None, :],
+                         B * cap)                           # OOB -> dropped
+        gen_buf = gen_buf.reshape(-1).at[dest.reshape(-1)].set(
+            blk.commit_vec.reshape(-1), mode="drop").reshape(B, cap)
+        new_count = gen_count + written.sum(axis=1, dtype=jnp.int32)
+        new_done = done | jnp.any(hit_eos, axis=1) | (new_count >= budget)
+        if collect:
+            buf = log_block_tuples(cfg, buf, blk, pending, done, k_spec=K)
+        return (i + 1, blk.pending, new_done, gen_buf, new_count,
+                blocks + live, committed + blk.accept,
+                accepted + blk.m * live, blk.cache, buf, blk.key)
+
+    def cond(carry):
+        return (carry[0] < steps) & ~jnp.all(carry[2])
+
+    carry = (jnp.int32(0), pending, done, jnp.zeros((B, cap), jnp.int32),
+             zeros, zeros, zeros, zeros, cache, buf, key)
+    (_, pending, done, gen_buf, gen_count, blocks, committed, accepted,
+     cache, buf, key) = jax.lax.while_loop(cond, body, carry)
+    return SuperstepResult(pending, done, gen_buf, gen_count, blocks,
+                           committed, accepted, cache, buf, key)
 
 
 def speculative_generate(model: Model, params: dict, dvi_params: dict,

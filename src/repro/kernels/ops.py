@@ -61,13 +61,17 @@ def decode_attention(q, k, v, lengths, block_s: int = 512, impl: str = "pallas")
 
 @partial(jax.jit, static_argnames=("impl",))
 def paged_decode_attention(q, k_pages, v_pages, lengths, block_tables,
-                           impl: str = "pallas"):
+                           page_counts=None, impl: str = "pallas"):
     """Paged-cache flash decode: K/V tiles gathered through the per-lane
-    block table (see repro.serving.kv_pool for the layout)."""
+    block table (see repro.serving.kv_pool for the layout).  Lanes early-out
+    of the page sweep after `page_counts` pages (default: just enough to
+    cover `lengths`)."""
     if impl == "ref":
         return ref.ref_paged_decode_attention(q, k_pages, v_pages, lengths,
-                                              block_tables)
+                                              block_tables,
+                                              page_counts=page_counts)
     return _paged_decode_attention(q, k_pages, v_pages, lengths, block_tables,
+                                   page_counts=page_counts,
                                    interpret=_interpret())
 
 

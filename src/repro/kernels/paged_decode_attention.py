@@ -6,19 +6,27 @@ cache is the paged pool layout (``repro.serving.kv_pool``): physical pages
 per-lane block table ``(B, max_pages)`` (int32, -1 = unmapped, physical
 page 0 = null page).
 
-The block table and per-lane lengths ride in as **scalar-prefetch**
-operands (``pltpu.PrefetchScalarGridSpec``), so the BlockSpec index map
-resolves the *physical* page to DMA before the kernel body runs — the grid
-walks logical pages, the memory system fetches ``tbl[b, p]``.  Unmapped
-entries clamp onto the null page; their scores are masked to -inf (the
-same rule the jnp model path applies), so null-page garbage never reaches
-the accumulator.  A page holding slots past the lane's length (the eager
-speculative tail) is masked per-slot by ``j < length``.
+The block table, per-lane lengths, AND per-lane active page counts ride in
+as **scalar-prefetch** operands (``pltpu.PrefetchScalarGridSpec``), so the
+BlockSpec index map resolves the *physical* page to DMA before the kernel
+body runs — the grid walks logical pages, the memory system fetches
+``tbl[b, p]``.  Unmapped entries clamp onto the null page; their scores are
+masked to -inf (the same rule the jnp model path applies), so null-page
+garbage never reaches the accumulator.  A page holding slots past the
+lane's length (the eager speculative tail) is masked per-slot by
+``j < length``.
 
 Grid: (B, KV, max_pages) — batch and kv-head parallel, logical pages
-innermost sequential.  Lanes shorter than ``max_pages * page_size`` still
-sweep the full page axis (masked); a trimmed grid via scalar-prefetched
-per-lane page counts is a TPU follow-on.
+innermost sequential.  **Per-lane early-out**: pages at or beyond the
+lane's active page count contribute nothing, so the index map clamps them
+onto the lane's LAST active page (a repeated block index means Mosaic
+skips the DMA — the tile is already resident) and the kernel body skips
+the flash update entirely (``pl.when(p < page_count)``); the output is
+written the moment the lane's last active page retires instead of at the
+end of the sweep.  A lane holding 2 of 64 pages therefore pays 2 tiles of
+DMA + compute, not 64 — the remaining grid steps are empty husks.
+``page_counts`` defaults to ``ceil(lengths / page_size)`` and may be
+passed explicitly (e.g. to force the full masked sweep for benchmarking).
 """
 from __future__ import annotations
 
@@ -35,11 +43,11 @@ from repro.kernels.compat import CompilerParams as _CompilerParams
 NEG = -1e30
 
 
-def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-            acc_ref, *, ps: int, scale: float):
+def _kernel(tbl_ref, len_ref, pc_ref, q_ref, k_ref, v_ref, o_ref, m_ref,
+            l_ref, acc_ref, *, ps: int, scale: float):
     b = pl.program_id(0)
     p = pl.program_id(2)
-    npg = pl.num_programs(2)
+    pc = pc_ref[b]
 
     @pl.when(p == 0)
     def _init():
@@ -47,27 +55,29 @@ def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0]                                # (G, hd)
-    k = k_ref[0, :, 0, :]                          # (ps, hd)
-    v = v_ref[0, :, 0, :]
-    length = len_ref[b]
-    mapped = tbl_ref[b, p] >= 0
+    @pl.when(p < pc)
+    def _update():
+        q = q_ref[0, 0]                            # (G, hd)
+        k = k_ref[0, :, 0, :]                      # (ps, hd)
+        v = v_ref[0, :, 0, :]
+        length = len_ref[b]
+        mapped = tbl_ref[b, p] >= 0
 
-    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-    j = p * ps + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
-    scores = jnp.where(mapped & (j < length), scores, NEG)
+        scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        j = p * ps + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        scores = jnp.where(mapped & (j < length), scores, NEG)
 
-    m_prev = m_ref[...]                            # (G,)
-    m_cur = jnp.maximum(m_prev, scores.max(axis=-1))
-    alpha = jnp.exp(m_prev - m_cur)
-    pexp = jnp.exp(scores - m_cur[:, None])        # (G, ps)
-    l_ref[...] = l_ref[...] * alpha + pexp.sum(axis=-1)
-    acc_ref[...] = (acc_ref[...] * alpha[:, None]
-                    + jnp.dot(pexp, v.astype(jnp.float32),
-                              preferred_element_type=jnp.float32))
-    m_ref[...] = m_cur
+        m_prev = m_ref[...]                        # (G,)
+        m_cur = jnp.maximum(m_prev, scores.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        pexp = jnp.exp(scores - m_cur[:, None])    # (G, ps)
+        l_ref[...] = l_ref[...] * alpha + pexp.sum(axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jnp.dot(pexp, v.astype(jnp.float32),
+                                  preferred_element_type=jnp.float32))
+        m_ref[...] = m_cur
 
-    @pl.when(p == npg - 1)
+    @pl.when(p == pc - 1)
     def _finish():
         o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
                        ).astype(o_ref.dtype)
@@ -76,29 +86,38 @@ def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                            v_pages: jax.Array, lengths: jax.Array,
                            block_tables: jax.Array, *,
+                           page_counts: jax.Array | None = None,
                            interpret: bool = False):
     """q (B, H, hd); k_pages/v_pages (P, ps, KV, hd); lengths (B,);
-    block_tables (B, MPS) int32 -> out (B, H, hd)."""
+    block_tables (B, MPS) int32; page_counts (B,) int32 active pages per
+    lane (default ceil(lengths / ps)) -> out (B, H, hd)."""
     B, H, hd = q.shape
     P, ps, KV = k_pages.shape[:3]
     MPS = block_tables.shape[1]
     G = H // KV
     qg = q.reshape(B, KV, G, hd)
     scale = 1.0 / math.sqrt(hd)
+    if page_counts is None:
+        page_counts = (lengths.astype(jnp.int32) + ps - 1) // ps
+    page_counts = jnp.clip(page_counts.astype(jnp.int32), 1, MPS)
 
-    def kv_map(b, h, p, tbl, lens):
-        return (jnp.maximum(tbl[b, p], 0), 0, h, 0)
+    def kv_map(b, h, p, tbl, lens, pc):
+        # beyond the lane's active pages: revisit the last active page so
+        # the pipeline issues no new DMA for the skipped grid steps
+        pe = jnp.minimum(p, pc[b] - 1)
+        return (jnp.maximum(tbl[b, pe], 0), 0, h, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(B, KV, MPS),
         in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda b, h, p, tbl, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, h, p, tbl, lens, pc: (b, h, 0, 0)),
             pl.BlockSpec((1, ps, 1, hd), kv_map),
             pl.BlockSpec((1, ps, 1, hd), kv_map),
         ],
         out_specs=pl.BlockSpec((1, 1, G, hd),
-                               lambda b, h, p, tbl, lens: (b, h, 0, 0)),
+                               lambda b, h, p, tbl, lens, pc: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((G,), jnp.float32),
             pltpu.VMEM((G,), jnp.float32),
@@ -112,5 +131,5 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(block_tables, lengths, qg, k_pages, v_pages)
+    )(block_tables, lengths, page_counts, qg, k_pages, v_pages)
     return out.reshape(B, H, hd)

@@ -45,11 +45,16 @@ def ref_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 def ref_paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                                v_pages: jax.Array, lengths: jax.Array,
                                block_tables: jax.Array,
-                               scale: float | None = None):
+                               scale: float | None = None,
+                               page_counts: jax.Array | None = None):
     """Paged oracle: q (B, H, hd); k_pages/v_pages (P, ps, KV, hd) pooled
     pages (page 0 = null); lengths (B,); block_tables (B, MPS) int32
     (-1 = unmapped).  Materializes each lane's logical view through the
-    block table, then attends slots j < length on mapped pages."""
+    block table, then attends slots j < length on mapped pages.
+    `page_counts` (B,) mirrors the Pallas kernel's per-lane early-out: only
+    the first page_counts[b] logical pages of lane b participate (identical
+    output whenever the counts cover `lengths`, which is the kernel's
+    default)."""
     from repro.serving.kv_pool import logical_to_physical
     B, H, hd = q.shape
     P, ps, KV = k_pages.shape[:3]
@@ -65,6 +70,9 @@ def ref_paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     qg = q.reshape(B, KV, G, hd)
     scores = jnp.einsum("bkgh,bskh->bkgs", qg, kf).astype(jnp.float32) * scale
     mask = (rpage >= 0) & (j[None, :] < lengths[:, None])     # (B, L)
+    if page_counts is not None:
+        pc = jnp.clip(page_counts.astype(jnp.int32), 1, MPS)
+        mask &= (j[None, :] // ps) < pc[:, None]
     scores = jnp.where(mask[:, None, None, :], scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1).astype(vf.dtype)
     out = jnp.einsum("bkgs,bskh->bkgh", p, vf)

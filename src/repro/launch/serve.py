@@ -46,6 +46,10 @@ def main():
                     default="continuous")
     ap.add_argument("--num-slots", type=int, default=8,
                     help="decode lanes for the continuous scheduler")
+    ap.add_argument("--sync-every", type=int, default=1,
+                    help="speculative blocks fused per device sync "
+                         "(continuous scheduler superstep size; admission/"
+                         "retirement happen at superstep boundaries)")
     ap.add_argument("--kv-pages", type=int, default=0,
                     help=">0: paged KV cache with this many pool pages")
     ap.add_argument("--kv-page-size", type=int, default=16,
@@ -71,7 +75,8 @@ def main():
                         num_slots=args.num_slots, batch_size=args.batch,
                         max_new=args.max_new, learn=not args.no_learn,
                         buckets=(args.prompt_len,), kv_pages=args.kv_pages,
-                        kv_page_size=args.kv_page_size)
+                        kv_page_size=args.kv_page_size,
+                        sync_every=args.sync_every)
     t0 = time.time()
     done = []
     for i in range(args.requests):
@@ -90,6 +95,12 @@ def main():
     print(f"[serve] {len(done)} completions, {toks} gen tokens in {dt:.1f}s "
           f"({toks/dt:.1f} tok/s); final acceptance={eng.acceptance:.3f}; "
           f"latency p50={lat['p50_s']:.2f}s p95={lat['p95_s']:.2f}s")
+    if args.scheduler == "continuous":
+        d = eng.dispatch_stats()
+        print(f"[serve] dispatch: sync_every={d['sync_every']} "
+              f"host_syncs/100blk={d['host_syncs_per_100_blocks']:.1f} "
+              f"host_wait={d['host_wait_s']:.2f}s "
+              f"dispatches={d['dispatches']}")
     if args.kv_pages:
         kv = eng.kv_stats()
         print(f"[serve] paged KV: peak_util={kv['peak_utilization']:.2f} "

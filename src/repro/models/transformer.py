@@ -673,6 +673,14 @@ def map_slot_pages(cache: dict, slot, row: jax.Array) -> dict:
     return dict(cache, tbl=tbl)
 
 
+def set_block_tables(cache: dict, tbl: jax.Array) -> dict:
+    """Replace the WHOLE block table (B, MPS) in one device op.  The serving
+    engine keeps a host-side mirror of the table and batches every per-lane
+    page-growth row update of a tick into this single push, instead of one
+    ``map_slot_pages`` dispatch per lane per allocation.  No KV moves."""
+    return dict(cache, tbl=tbl.astype(jnp.int32))
+
+
 def fill_cache_from_full(cfg: ModelConfig, cache: dict, contribs: dict,
                          T: int) -> dict:
     """Scatter prefill contributions (stacked (n,B,T,...)) into the cache.

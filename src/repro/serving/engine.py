@@ -8,15 +8,34 @@ the shared speculative block-step (``spec_block_step``):
   cache; each lane independently holds a request at its own committed length,
 * arriving requests are prefilled individually (exact prompt, no bucket
   padding) and spliced into a free lane with ``transformer.insert_slot``,
-* every engine tick runs ONE speculative block across all lanes; idle lanes
-  ride along masked ``done`` (accept = 0, no state change, no tuples logged),
-* lanes retire per-request on EOS or ``max_new`` — completions stream out as
-  they finish instead of waiting for the whole batch (no head-of-line
-  blocking) — and the lane is reset (``transformer.reset_slot``) for reuse,
+* every engine tick dispatches ONE fused **superstep** of ``sync_every``
+  speculative blocks (``spec_superstep``): EOS detection, per-lane budget
+  capping, token-stream assembly, and tuple logging all run in-graph, so
+  the host syncs with the device once per superstep — a compact summary
+  (done mask, per-lane commit counts, token buffer) — instead of once per
+  block; idle lanes ride along masked ``done`` (accept = 0, no state
+  change, no tuples logged),
+* the dispatch is **double-buffered**: ``step()`` first admits arrivals
+  into already-free lanes (those ops queue behind the in-flight superstep
+  without blocking), only then harvests the in-flight summary, so host
+  bookkeeping overlaps device compute instead of serializing behind it,
+* lanes retire per-request on EOS or ``max_new`` — completions stream out
+  at superstep boundaries (the superstep/`sync_every` contract: admission,
+  retirement, and preemption happen only at boundaries; token streams stay
+  bit-identical to per-block ticking, the trade is up to ``sync_every - 1``
+  blocks of extra completion latency for ~``sync_every``x fewer host
+  syncs/dispatches) — and the lane is reset for reuse,
 * the LoRA drafter takes an update every ``update_every`` block-steps from
-  the replay buffer, decoupled from request boundaries,
+  the replay buffer; the update is dispatched WITHOUT blocking the engine —
+  the new ``dvi_params`` are folded in at the next superstep boundary, so
+  decode proceeds with (one superstep) stale drafter weights instead of
+  stalling behind the optimizer (lossless: the committed stream never
+  depends on drafter quality, only acceptance does),
 * per-request latency (arrival -> completion; see ``latency_percentiles``)
-  and per-slot acceptance are tracked so drift and stragglers are observable.
+  and per-slot acceptance are tracked so drift and stragglers are
+  observable; latencies are kept in a rolling window of the most recent
+  ``latency_window`` completions so long-running engines don't grow
+  unboundedly.
 
 With ``kv_pages > 0`` the continuous scheduler runs over a **paged** KV
 cache (``repro.serving.kv_pool``): full-attention KV lives in a shared page
@@ -26,9 +45,12 @@ and scheduling becomes memory-aware:
 * **admission** checks the free-page watermark, not just a free lane — a
   request is admitted when the pool can cover its prompt plus one
   speculative block (later growth is on demand),
-* **growth**: before every block-step each live lane is topped up to cover
-  ``length + K + 2`` slots; pages are allocated only as sequences grow, so
-  short requests no longer pay for long ones,
+* **growth**: before every superstep each live lane is topped up to cover
+  the positions that superstep can touch — ``sync_every`` blocks of K+1
+  eager tokens, CAPPED by the lane's remaining ``max_new`` budget (a lane
+  about to retire only gets pages for the blocks it can still run) — so
+  pages are allocated only as sequences grow and short/near-done requests
+  no longer pay for long ones,
 * **preempt-or-queue**: when the pool runs dry mid-decode, the newest lane
   is preempted — its pages return to the pool, its progress (prompt +
   generated prefix) is re-queued at the front of the FIFO and replayed via
@@ -101,6 +123,8 @@ class ServingEngine:
     buckets: tuple = (16, 32, 64, 128)
     updates_per_batch: int = 1    # sync: drafter updates after each batch
     update_every: int = 4         # continuous: blocks between drafter updates
+    sync_every: int = 1           # continuous: blocks fused per device sync
+    latency_window: int = 4096    # rolling window of completion latencies
     learn: bool = True
     lr: float = 1e-3
     mode: str = "full"
@@ -112,9 +136,10 @@ class ServingEngine:
     _queue: Dict[int, List[Request]] = field(default_factory=dict)
     _fifo: deque = field(default_factory=deque)
     stats: dict = field(default_factory=lambda: {
-        "requests": 0, "blocks": 0, "committed": 0, "accepted": 0,
-        "drafted": 0, "updates": 0, "preemptions": 0, "peak_live_slots": 0,
-        "latencies": []})
+        "requests": 0, "blocks": 0, "steps": 0, "committed": 0,
+        "accepted": 0, "drafted": 0, "updates": 0, "preemptions": 0,
+        "peak_live_slots": 0, "host_syncs": 0, "sync_wait_s": 0.0,
+        "dispatches": 0, "latencies": []})
 
     def __post_init__(self):
         model, cfg = self.model, self.model.cfg
@@ -134,6 +159,8 @@ class ServingEngine:
         self._slot_drafted = np.zeros((self.num_slots,), np.int64)
         self._submit_t: Dict[int, float] = {}
         self._blocks_since_update = 0
+        self.stats["latencies"] = deque(self.stats["latencies"],
+                                        maxlen=self.latency_window)
 
         # ONE jitted generation entry point (jit shape-specializes on
         # `prompts`, so per-bucket closure caching was pure duplication);
@@ -144,12 +171,26 @@ class ServingEngine:
                 collect=True, buf=buf, live_mask=live)
         self._gen = jax.jit(gen, static_argnums=(5,))
 
-        def block(params, dvi_params, pending, cache, buf, done):
-            blk = spec_mod.spec_block_step(model, params, dvi_params,
-                                           pending, cache, done=done)
-            buf = spec_mod.log_block_tuples(cfg, buf, blk, pending, done)
-            return blk.pending, blk.commit_vec, blk.accept, blk.m, blk.cache, buf
-        self._block = jax.jit(block)
+        # the fused multi-block tick: sync_every blocks per device dispatch,
+        # commit/EOS/budget handling in-graph (see spec_superstep)
+        S = max(1, int(self.sync_every))
+        self.sync_every = S
+        eos = self.eos_id
+
+        def superstep(params, dvi_params, pending, cache, buf, done, budget):
+            return spec_mod.spec_superstep(
+                model, params, dvi_params, pending, cache, steps=S,
+                done=done, budget=budget, eos_id=eos, buf=buf, collect=True)
+        self._superstep_fn = jax.jit(superstep)
+        # (SuperstepResult futures, engine-clock mark, occupied lanes)
+        self._inflight: Optional[tuple] = None
+        # drafter update dispatched but not yet folded into self.state
+        self._update_inflight: Optional[tuple] = None
+        # engine-resident clock: total time spent inside _step_continuous.
+        # Per-request wall_s is attributed from THIS clock, so caller think
+        # time between step() calls is never billed to lanes' compute.
+        self._clock = 0.0
+        self._tick_t0: Optional[float] = None
 
         cap = self._cap
 
@@ -163,6 +204,10 @@ class ServingEngine:
                 raise ValueError("paged KV requires scheduler='continuous'")
             self._pool = KVPool(self.kv_pages, self.kv_page_size)
             self._mps = self._pool.pages_for(cap)      # block-table width
+            # host mirror of cache["tbl"]: per-tick page growth batches every
+            # lane's row update into ONE device push (set_block_tables)
+            # instead of one map_slot_pages dispatch per lane per allocation
+            self._tbl_host = np.full((self.num_slots, self._mps), -1, np.int32)
             if self.kv_pages - self.kv_watermark < self._mps:
                 raise ValueError(
                     f"kv_pages={self.kv_pages} minus watermark="
@@ -190,8 +235,7 @@ class ServingEngine:
             return pending, cache
         self._admit_paged_fn = jax.jit(admit_paged)
 
-        self._map_fn = jax.jit(
-            lambda cache, slot, row: tfm.map_slot_pages(cache, slot, row))
+        self._set_tbl_fn = jax.jit(tfm.set_block_tables)
         self._reset_fn = jax.jit(
             lambda cache, slot: tfm.reset_slot(cfg, cache, slot))
 
@@ -312,13 +356,50 @@ class ServingEngine:
             prompt = prompt[-limit:]
         return prompt
 
-    def _admit_waiting(self) -> None:
+    def _superstep_horizon(self, remaining: int) -> int:
+        """Cache slots one superstep can touch beyond a lane's committed
+        length: ``sync_every`` blocks of K+1 eager tokens, capped by the
+        lane's remaining generation budget (a lane that can only run r more
+        blocks before retiring advances the cache at most r + K slots).
+        The ONE formula shared by admission sizing and page growth — they
+        must stay in lockstep, since lanes admitted after the tick's growth
+        pass run their first superstep on admission's provisioning alone."""
+        K = self.model.cfg.dvi.k_spec
+        return min(self.sync_every * (K + 1), remaining + K)
+
+    def _pages_needed(self, cache_len: int, remaining: int) -> int:
+        """Pages covering `cache_len` committed slots plus one superstep
+        horizon (+1 slack slot, the pre-superstep rule since PR 3)."""
+        return self._pool.pages_for(
+            cache_len + self._superstep_horizon(remaining) + 1)
+
+    def _growth_reserve(self) -> int:
+        """Upper bound on the pages live lanes may still need for their
+        NEXT growth pass, assuming the in-flight superstep commits its full
+        horizon.  Pre-admission (which runs BEFORE harvest + growth) keeps
+        this many pages untouched so a new request never grabs pages that
+        older live lanes immediately claw back by preempting it."""
+        reserve = 0
+        for st in self._slots:
+            if st is None:
+                continue
+            remaining = st.max_new - len(st.gen)
+            if remaining <= 0:
+                continue
+            inflight_cap = st.cache_len + self._superstep_horizon(remaining)
+            need = self._pages_needed(inflight_cap, remaining)
+            reserve += max(0, need - len(self._pool.owned(st.uid)))
+        return reserve
+
+    def _admit_waiting(self, reserve: int = 0) -> None:
         """Prefill-on-arrival: splice queued requests into free lanes.
         Paged mode additionally gates admission on the free-page watermark:
-        the pool must cover the prompt plus one speculative block (decode
-        growth is allocated on demand, block by block)."""
-        cfg = self.model.cfg
-        K = cfg.dvi.k_spec
+        the pool must cover the prompt plus the lane's FIRST superstep
+        (``sync_every`` blocks of K+1 eager tokens, budget-capped) — lanes
+        can be admitted after this tick's growth pass ran, so admission
+        itself must provision the horizon; later growth is on demand.
+        `reserve`: extra pages kept free on top of the watermark
+        (pre-admission passes the live lanes' growth demand)."""
         while self._fifo and not all(s is not None for s in self._slots):
             slot = next(i for i, s in enumerate(self._slots) if s is None)
             req = self._fifo[0]
@@ -331,13 +412,16 @@ class ServingEngine:
                     self._mps) if self.paged
                     else self.model.init_cache(self.num_slots, self._cap))
             if self.paged:
-                need = self._pool.pages_for(len(prompt) + K + 1)
-                if not self._pool.can_alloc(need, self.kv_watermark):
+                need = self._pages_needed(len(prompt) - 1,
+                                          max_new - gen_carry)
+                if not self._pool.can_alloc(need,
+                                            self.kv_watermark + reserve):
                     break                    # head-of-line wait for pages
                 self._fifo.popleft()
                 pages = self._pool.alloc(need, owner=req.uid)
                 row = np.full(self._mps, -1, np.int32)
                 row[:len(pages)] = pages
+                self._tbl_host[slot] = row
                 self._pending, self._cache = self._admit_paged_fn(
                     self.params, self._cache, self._pending,
                     jnp.asarray(prompt), jnp.int32(slot), jnp.asarray(row))
@@ -364,6 +448,7 @@ class ServingEngine:
         continues exactly where it stopped."""
         st = self._slots[slot]
         self._pool.free(st.uid)
+        self._tbl_host[slot] = -1
         # carry progress AND cost attribution (blocks, wall) across the
         # preemption so Completion.mat / wall_s stay truthful
         self._preempted[st.uid] = (st.prompt, list(st.gen), st.blocks,
@@ -378,20 +463,29 @@ class ServingEngine:
         self.stats["preemptions"] += 1
 
     def _grow_pages(self) -> None:
-        """Top every live lane up to `cache_len + K + 2` slots of page
-        capacity before the block-step (the draft writes K+1 eager tokens at
-        positions len..len+K).  On pool exhaustion, preempt the NEWEST other
-        lane and retry — oldest requests keep their pages (no livelock:
-        admission guarantees any single request fits the pool)."""
-        K = self.model.cfg.dvi.k_spec
+        """Top every live lane up to the page capacity the NEXT superstep
+        can touch: ``sync_every`` blocks each write K+1 eager tokens, so the
+        horizon is ``sync_every * (K+1)`` slots — capped by the lane's
+        remaining ``max_new`` budget (a lane that can only run r more blocks
+        before retiring advances the cache at most r+K slots; growing it
+        further would waste pool headroom under pressure).  On pool
+        exhaustion, preempt the NEWEST other lane and retry — oldest
+        requests keep their pages (no livelock: admission guarantees any
+        single request fits the pool).  All row updates of the tick are
+        batched into ONE device push (set_block_tables) instead of a
+        map_slot_pages dispatch per lane."""
+        dirty = False
         for s in sorted((i for i, st in enumerate(self._slots) if st is not None),
                         key=lambda i: self._slots[i].admit_seq):
             st = self._slots[s]
             if st is None:
                 continue
+            remaining = st.max_new - len(st.gen)
+            if remaining <= 0:           # retires at the next boundary
+                continue
             while True:
                 have = len(self._pool.owned(st.uid))
-                need = self._pool.pages_for(st.cache_len + K + 2)
+                need = self._pages_needed(st.cache_len, remaining)
                 if need <= have:
                     break
                 got = self._pool.alloc(need - have, owner=st.uid)
@@ -402,62 +496,89 @@ class ServingEngine:
                         break            # this unreachable; fail soft
                     self._preempt(max(victims,
                                       key=lambda i: self._slots[i].admit_seq))
+                    dirty = True         # preemption unmapped a row
                     continue
-                row = np.full(self._mps, -1, np.int32)
                 owned = self._pool.owned(st.uid)    # allocation order == logical
-                row[:len(owned)] = owned
-                self._cache = self._map_fn(self._cache, jnp.int32(s),
-                                           jnp.asarray(row))
+                self._tbl_host[s] = -1
+                self._tbl_host[s, :len(owned)] = owned
+                dirty = True
+        if dirty:
+            self._cache = self._set_tbl_fn(self._cache,
+                                           jnp.asarray(self._tbl_host))
 
-    def _step_continuous(self) -> List[Completion]:
-        """One tick: admit arrivals, grow paged lanes (preempting if the
-        pool runs dry), run ONE speculative block across all lanes, retire
-        finished lanes, maybe update the drafter."""
-        # grow BEFORE admitting: admission then sees the true residual
-        # capacity, instead of grabbing pages that live lanes immediately
-        # claw back by preempting the just-admitted (newest) lane
-        if self.paged:
-            self._grow_pages()
-        self._admit_waiting()
-        if self.active_slots == 0:
-            return []
+    def _dispatch_superstep(self) -> None:
+        """Dispatch one fused superstep over the live lanes and return
+        immediately — the host does NOT wait for the result (``_harvest``
+        does, one engine tick later)."""
+        budget = np.ones((self.num_slots,), np.int32)
+        for s, st in enumerate(self._slots):
+            if st is not None:
+                budget[s] = st.max_new - len(st.gen)
+        res = self._superstep_fn(self.params, self.state.dvi_params,
+                                 self._pending, self._cache, self.state.buf,
+                                 jnp.asarray(self._done), jnp.asarray(budget))
+        # engine state advances to the (not yet materialized) outputs; every
+        # follow-up device op (admission, reset, next superstep) chains on
+        # them without a host round-trip
+        self._pending, self._cache = res.pending, res.cache
+        self.state.buf = res.buffer
+        lanes = [s for s, st in enumerate(self._slots) if st is not None]
+        mark = self._clock + (time.perf_counter() - self._tick_t0)
+        self._inflight = (res, mark, lanes)
+        self.stats["dispatches"] += 1
         self.stats["peak_live_slots"] = max(self.stats["peak_live_slots"],
-                                            self.active_slots)
+                                            len(lanes))
+
+    def _harvest(self) -> List[Completion]:
+        """Materialize the in-flight superstep's compact summary (the ONLY
+        device->host sync on the continuous hot path), fold it into host
+        bookkeeping, retire finished lanes, and manage drafter updates."""
+        # fold a completed drafter update FIRST — even with no in-flight
+        # superstep (engine drained and is being stepped again), so a
+        # trained update dispatched on the last tick of a burst is never
+        # dropped; the next dispatch below then uses the fresh params
+        if self._update_inflight is not None:
+            (self.state.dvi_params, self.state.opt_state,
+             self.state.baseline) = self._update_inflight
+            self._update_inflight = None
+        if self._inflight is None:
+            return []
+        res, clock_mark, lanes = self._inflight
+        self._inflight = None
         K = self.model.cfg.dvi.k_spec
-        done = jnp.asarray(self._done)
         t0 = time.perf_counter()
-        (self._pending, commit_vec, accept, m, self._cache,
-         self.state.buf) = self._block(self.params, self.state.dvi_params,
-                                       self._pending, self._cache,
-                                       self.state.buf, done)
-        jax.block_until_ready(commit_vec)
-        wall = time.perf_counter() - t0
-        wall_each = wall / self.active_slots
-        commit_np = np.asarray(commit_vec)
-        acc_np = np.asarray(accept)
-        m_np = np.asarray(m)
+        (done_np, cnt_np, gen_np, blocks_np, committed_np,
+         accepted_np, buf_count) = jax.device_get(
+            (res.done, res.gen_count, res.gen_buf, res.lane_blocks,
+             res.lane_committed, res.lane_accepted, res.buffer["count"]))
+        now = time.perf_counter()
+        self.stats["host_syncs"] += 1
+        self.stats["sync_wait_s"] += now - t0
+        # iterations the superstep actually executed (it exits early once
+        # every lane is done): the longest-lived lane saw all of them
+        self.stats["steps"] += int(blocks_np.max(initial=0))
+        # engine-resident time since the dispatch (caller time excluded)
+        wall = self._clock + (now - self._tick_t0) - clock_mark
+        total_blocks = int(blocks_np.sum())
+        wall_share = wall / max(total_blocks, 1)
 
         outs: List[Completion] = []
-        for s, st in enumerate(self._slots):
-            if st is None:
-                continue
-            st.blocks += 1
-            st.wall_s += wall_each
-            st.cache_len += int(acc_np[s])
-            self.stats["blocks"] += 1
-            self.stats["committed"] += int(acc_np[s])
-            self.stats["accepted"] += int(m_np[s])
-            self.stats["drafted"] += K
-            self._slot_accepted[s] += int(m_np[s])
-            self._slot_drafted[s] += K
-            for t in commit_np[s, :int(acc_np[s])]:
-                if len(st.gen) >= st.max_new:
-                    break
-                st.gen.append(int(t))
-                if int(t) == self.eos_id:
-                    break
-            if st.gen and (st.gen[-1] == self.eos_id
-                           or len(st.gen) >= st.max_new):
+        for s in lanes:                  # only lanes occupied at dispatch:
+            st = self._slots[s]          # slots admitted since then (into
+            if st is None:               # previously-free lanes) rode along
+                continue                 # masked done and carry no results
+            nb = int(blocks_np[s])
+            st.blocks += nb
+            st.wall_s += wall_share * nb
+            st.cache_len += int(committed_np[s])
+            st.gen.extend(int(t) for t in gen_np[s, :int(cnt_np[s])])
+            self.stats["blocks"] += nb
+            self.stats["committed"] += int(committed_np[s])
+            self.stats["accepted"] += int(accepted_np[s])
+            self.stats["drafted"] += K * nb
+            self._slot_accepted[s] += int(accepted_np[s])
+            self._slot_drafted[s] += K * nb
+            if done_np[s]:               # EOS or budget, detected in-graph
                 gen = np.asarray(st.gen, np.int32)
                 outs.append(self._complete(
                     st.uid, np.concatenate([st.prompt, gen]), gen,
@@ -465,15 +586,52 @@ class ServingEngine:
                 self.stats["requests"] += 1
                 if self.paged:
                     self._pool.free(st.uid)   # copy-free eviction: pages
+                    self._tbl_host[s] = -1    # recycle host-side
                 self._cache = self._reset_fn(self._cache, jnp.int32(s))
                 self._slots[s] = None
                 self._done[s] = True
 
-        self._blocks_since_update += 1
+        # drafter update cadence: maybe dispatch the next update — WITHOUT
+        # blocking on it; the engine decodes one superstep on stale
+        # dvi_params while the optimizer runs (folded at the top of the
+        # next harvest, i.e. the next superstep boundary)
+        self._blocks_since_update += int(blocks_np.max(initial=0))
         if (self.learn and self._blocks_since_update >= self.update_every
-                and int(self.state.buf["count"]) > 0):
+                and int(buf_count) > 0):
             self._blocks_since_update = 0
-            self._drafter_update(1)
+            self._key, sub = jax.random.split(self._key)
+            new_dvi, new_opt, new_base, _m = self._update_fn(
+                self.params, self.state.dvi_params, self.state.opt_state,
+                self.state.buf, self.state.baseline, self.state.step, sub)
+            self._update_inflight = (new_dvi, new_opt, new_base)
+            self.state.step = self.state.step + 1
+            self.stats["updates"] += 1
+        return outs
+
+    def _step_continuous(self) -> List[Completion]:
+        """One tick: pre-admit arrivals into already-free lanes (their
+        prefill dispatches queue behind the in-flight superstep — host work
+        overlaps device compute), harvest the in-flight superstep, retire
+        finished lanes, grow paged lanes (preempting if the pool runs dry),
+        admit into freshly freed lanes, and dispatch the next superstep."""
+        self._tick_t0 = time.perf_counter()
+        try:
+            # pre-admission reserves the live lanes' worst-case growth
+            # demand (paged): a new request must not grab pages this tick's
+            # growth pass would claw back by preempting the admitted lane
+            self._admit_waiting(self._growth_reserve() if self.paged else 0)
+            outs = self._harvest()
+            # grow BEFORE admitting: admission then sees the true residual
+            # capacity, instead of grabbing pages that live lanes
+            # immediately claw back by preempting the just-admitted lane
+            if self.paged:
+                self._grow_pages()
+            self._admit_waiting()
+            if self.active_slots > 0:
+                self._dispatch_superstep()
+        finally:
+            self._clock += time.perf_counter() - self._tick_t0
+            self._tick_t0 = None
         return outs
 
     # ------------------------------------------------------------------
@@ -487,7 +645,11 @@ class ServingEngine:
 
     @property
     def busy(self) -> bool:
+        # _update_inflight keeps the engine busy so the driver steps once
+        # more and the final drafter update of a burst is actually folded
         return (bool(self._fifo) or self.active_slots > 0
+                or self._inflight is not None
+                or self._update_inflight is not None
                 or any(self._queue.values()))
 
     def run(self, max_steps: int = 10**9) -> List[Completion]:
@@ -505,10 +667,11 @@ class ServingEngine:
     def reset_stats(self) -> None:
         """Zero counters/latencies (e.g. after a warm-up run); jit caches,
         drafter state, and live slots are untouched."""
-        self.stats = {"requests": 0, "blocks": 0, "committed": 0,
-                      "accepted": 0, "drafted": 0, "updates": 0,
-                      "preemptions": 0, "peak_live_slots": 0,
-                      "latencies": []}
+        self.stats = {"requests": 0, "blocks": 0, "steps": 0,
+                      "committed": 0, "accepted": 0, "drafted": 0,
+                      "updates": 0, "preemptions": 0, "peak_live_slots": 0,
+                      "host_syncs": 0, "sync_wait_s": 0.0, "dispatches": 0,
+                      "latencies": deque(maxlen=self.latency_window)}
         self._slot_accepted[:] = 0
         self._slot_drafted[:] = 0
 
@@ -533,9 +696,28 @@ class ServingEngine:
         return out
 
     def latency_percentiles(self) -> dict:
-        lats = self.stats["latencies"]
-        if not lats:
+        """Percentiles over the most recent ``latency_window`` completions
+        (rolling window, so long-running engines stay O(window) memory)."""
+        lats = np.asarray(self.stats["latencies"], np.float64)
+        if lats.size == 0:
             return {"p50_s": 0.0, "p95_s": 0.0, "mean_s": 0.0}
         return {"p50_s": float(np.percentile(lats, 50)),
                 "p95_s": float(np.percentile(lats, 95)),
                 "mean_s": float(np.mean(lats))}
+
+    def dispatch_stats(self) -> dict:
+        """Host/device interplay on the continuous hot path: how often the
+        host synced with the device, how long it sat blocked, and how many
+        superstep dispatches covered the executed block-steps.  `steps` is
+        scheduler ITERATIONS (batch block-steps executed); `blocks` in
+        `stats` is the per-live-lane count used for MAT/acceptance."""
+        steps = max(self.stats["steps"], 1)
+        return {
+            "sync_every": self.sync_every,
+            "steps": self.stats["steps"],
+            "dispatches": self.stats["dispatches"],
+            "host_syncs": self.stats["host_syncs"],
+            "host_syncs_per_100_blocks":
+                100.0 * self.stats["host_syncs"] / steps,
+            "host_wait_s": self.stats["sync_wait_s"],
+        }

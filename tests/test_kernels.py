@@ -105,6 +105,41 @@ def test_paged_decode_attention(B, H, KV, hd, ps, ppl, holes):
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
 
 
+def test_paged_early_out_ragged_lengths():
+    """Per-lane page-count early-out: lanes spanning 1 slot up to the full
+    mapped capacity (ragged, incl. page-boundary lengths) must match the
+    full-sweep oracle bit-for-bit — the skipped pages were all masked."""
+    B, H, KV, hd, ps, ppl = 4, 8, 4, 16, 8, 6
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, hd))
+    kp, vp, _, tbl = _paged_setup(jax.random.PRNGKey(2), B, KV, hd, ps, ppl)
+    # 1 slot, page-boundary, mid-page, full capacity
+    lens = jnp.array([1, ps, 2 * ps + 3, ppl * ps])
+    out = paged_decode_attention(q, kp, vp, lens, tbl, **I)
+    expect = ref.ref_paged_decode_attention(q, kp, vp, lens, tbl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+
+
+def test_paged_explicit_page_counts_matches_oracle():
+    """An explicit page_counts SMALLER than the length coverage trims the
+    attended window; kernel and oracle must agree on the trimmed result."""
+    B, H, KV, hd, ps, ppl = 2, 8, 2, 32, 8, 4
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, H, hd))
+    kp, vp, _, tbl = _paged_setup(jax.random.PRNGKey(3), B, KV, hd, ps, ppl)
+    lens = jnp.full((B,), ppl * ps)                 # full lanes...
+    pc = jnp.array([1, 3], jnp.int32)               # ...but trimmed sweeps
+    out = paged_decode_attention(q, kp, vp, lens, tbl, page_counts=pc, **I)
+    expect = ref.ref_paged_decode_attention(q, kp, vp, lens, tbl,
+                                            page_counts=pc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+    # and forcing the full sweep on short lanes changes nothing
+    short = jnp.full((B,), ps // 2)
+    full = paged_decode_attention(q, kp, vp, short, tbl,
+                                  page_counts=jnp.full((B,), ppl, jnp.int32),
+                                  **I)
+    trim = paged_decode_attention(q, kp, vp, short, tbl, **I)
+    np.testing.assert_allclose(np.asarray(trim), np.asarray(full), atol=2e-5)
+
+
 def test_paged_matches_contiguous_ref():
     """A paged cache whose pages are laid out in logical order must attend
     identically to the same KV stored contiguously."""

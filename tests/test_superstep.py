@@ -1,0 +1,280 @@
+"""Fused superstep (`spec_superstep`): running S blocks in one device
+dispatch must be BIT-IDENTICAL to S per-block ticks — (1) at the spec level
+against a python reference replicating the host commit loop (greedy and
+rejection-sampled, contiguous and paged caches), (2) at the engine level
+across sync_every ∈ {1, 2, 8} and arrival orders, (3) the engine's host-sync
+count actually drops with sync_every, (4) latency tracking is bounded by the
+rolling window, and (5) paged page growth is capped by a lane's remaining
+generation budget."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.core import lora, online, spec
+from repro.models.model import build_model
+import repro.models.transformer as tfm
+from repro.serving import Request, ServingEngine
+from repro.serving.kv_pool import KVPool, pages_for
+
+EOS = 1
+
+
+@pytest.fixture(scope="module")
+def backbone():
+    cfg = tiny_cfg("vicuna-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dvi = lora.init_draft_params(jax.random.PRNGKey(5), cfg)
+    return cfg, model, params, dvi
+
+
+def _blockstep_reference(model, params, dvi, pending, cache, steps, budget,
+                         temperature=0.0, key=None):
+    """The per-block host loop the engine used to run, verbatim: python-side
+    commit with budget capping and stop-after-EOS, lanes masked done."""
+    B = pending.shape[0]
+    key = key if key is not None else jax.random.PRNGKey(0)
+    done = np.zeros((B,), bool)
+    gens = [[] for _ in range(B)]
+    blocks = np.zeros((B,), np.int64)
+    committed = np.zeros((B,), np.int64)
+    accepted = np.zeros((B,), np.int64)
+
+    @jax.jit
+    def one_block(pending, cache, done, key):
+        return spec.spec_block_step(model, params, dvi, pending, cache,
+                                    done=done, temperature=temperature,
+                                    key=key)
+
+    for _ in range(steps):
+        if done.all():
+            break
+        blk = one_block(pending, cache, jnp.asarray(done), key)
+        pending, cache, key = blk.pending, blk.cache, blk.key
+        acc = np.asarray(blk.accept)
+        cv = np.asarray(blk.commit_vec)
+        m = np.asarray(blk.m)
+        for b in range(B):
+            if done[b]:
+                continue
+            blocks[b] += 1
+            committed[b] += acc[b]
+            accepted[b] += m[b]
+            for t in cv[b, :acc[b]]:
+                if len(gens[b]) >= budget[b]:
+                    break
+                gens[b].append(int(t))
+                if int(t) == EOS:
+                    break
+            if gens[b] and (gens[b][-1] == EOS or len(gens[b]) >= budget[b]):
+                done[b] = True
+    return gens, np.asarray(pending), done, blocks, committed, accepted
+
+
+def _prefill_contiguous(model, prompts, params):
+    _, cache, _ = model.prefill(params, prompts[:, :-1], max_len=96)
+    return cache, prompts[:, -1]
+
+
+def _prefill_paged(cfg, model, params, prompts, ps=4, mps=24):
+    B, Tp = prompts.shape
+    K = cfg.dvi.k_spec
+    pool = KVPool(num_pages=B * mps, page_size=ps)
+    cache = model.init_paged_cache(B, pool.num_pages, ps, mps)
+    for b in range(B):
+        need = pages_for(Tp - 1 + 10 * (K + 1), ps)   # covers the test run
+        row = np.full(mps, -1, np.int32)
+        row[:need] = pool.alloc(need, owner=b)
+        cache = tfm.map_slot_pages(cache, jnp.int32(b), jnp.asarray(row))
+        _, pc, _ = model.prefill(params, prompts[b:b + 1, :-1],
+                                 max_len=Tp - 1)
+        cache = tfm.insert_slot(cfg, cache, pc, jnp.int32(b))
+    return cache, prompts[:, -1]
+
+
+@pytest.mark.parametrize("steps", [1, 2, 8])
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+def test_superstep_matches_blockstep_loop(backbone, steps, temperature,
+                                          layout):
+    cfg, model, params, dvi = backbone
+    B, Tp = 3, 8
+    prompts = jax.random.randint(jax.random.PRNGKey(7), (B, Tp), 2,
+                                 cfg.vocab_size)
+    budget = np.array([4, 9, 30], np.int32)          # one lane exhausts early
+    key = jax.random.PRNGKey(99)
+
+    if layout == "paged":
+        cache, pending = _prefill_paged(cfg, model, params, prompts)
+        rcache, rpending = _prefill_paged(cfg, model, params, prompts)
+    else:
+        cache, pending = _prefill_contiguous(model, prompts, params)
+        rcache, rpending = _prefill_contiguous(model, prompts, params)
+
+    res = spec.spec_superstep(model, params, dvi, pending, cache,
+                              steps=steps, budget=jnp.asarray(budget),
+                              eos_id=EOS, temperature=temperature, key=key)
+    gens, rpend, rdone, rblocks, rcommitted, raccepted = _blockstep_reference(
+        model, params, dvi, rpending, rcache, steps, budget,
+        temperature=temperature, key=key)
+
+    cnt = np.asarray(res.gen_count)
+    buf = np.asarray(res.gen_buf)
+    for b in range(B):
+        assert buf[b, :cnt[b]].tolist() == gens[b], f"lane {b} stream"
+    np.testing.assert_array_equal(np.asarray(res.done), rdone)
+    np.testing.assert_array_equal(np.asarray(res.lane_blocks), rblocks)
+    np.testing.assert_array_equal(np.asarray(res.lane_committed), rcommitted)
+    np.testing.assert_array_equal(np.asarray(res.lane_accepted), raccepted)
+    np.testing.assert_array_equal(np.asarray(res.pending), rpend)
+    np.testing.assert_array_equal(np.asarray(res.cache["lengths"]),
+                                  np.asarray(rcache["lengths"])
+                                  + rcommitted.astype(np.int32))
+
+
+def test_superstep_chain_equals_one_superstep(backbone):
+    """Two chained supersteps of 2 == one superstep of 4 (done/budget carry
+    across the boundary exactly)."""
+    cfg, model, params, dvi = backbone
+    B, Tp = 2, 8
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (B, Tp), 2,
+                                 cfg.vocab_size)
+    budget = jnp.asarray(np.array([5, 30], np.int32))
+
+    cache, pending = _prefill_contiguous(model, prompts, params)
+    one = spec.spec_superstep(model, params, dvi, pending, cache, steps=4,
+                              budget=budget, eos_id=EOS)
+
+    cache, pending = _prefill_contiguous(model, prompts, params)
+    a = spec.spec_superstep(model, params, dvi, pending, cache, steps=2,
+                            budget=budget, eos_id=EOS)
+    b = spec.spec_superstep(model, params, dvi, a.pending, a.cache, steps=2,
+                            done=a.done, budget=budget - a.gen_count,
+                            eos_id=EOS)
+    for lane in range(B):
+        s1 = np.asarray(one.gen_buf)[lane, :int(one.gen_count[lane])]
+        s2 = np.concatenate([
+            np.asarray(a.gen_buf)[lane, :int(a.gen_count[lane])],
+            np.asarray(b.gen_buf)[lane, :int(b.gen_count[lane])]])
+        np.testing.assert_array_equal(s1, s2)
+    np.testing.assert_array_equal(np.asarray(one.done), np.asarray(b.done))
+
+
+# ---------------------------------------------------------------------------
+# engine level: streams identical across sync_every, syncs actually drop
+# ---------------------------------------------------------------------------
+
+def _requests(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        Tp = int(rng.choice([6, 9, 12]))
+        mn = int(rng.choice([6, 10, 16]))
+        p = np.asarray(jax.random.randint(jax.random.PRNGKey(100 + i), (Tp,),
+                                          2, cfg.vocab_size), np.int32)
+        reqs.append(Request(uid=i, prompt=p, max_new=mn))
+    return reqs
+
+
+def _serve(model, params, reqs, order, **kw):
+    state = online.init_trainer(model, jax.random.PRNGKey(3))
+    eng = ServingEngine(model, params, state, scheduler="continuous",
+                        max_new=16, **kw)
+    for i in order:
+        eng.submit(reqs[i])
+    outs = eng.run(max_steps=2000)
+    assert len(outs) == len(reqs)
+    assert not eng.busy
+    return eng, {o.uid: o.gen_tokens.tolist() for o in outs}
+
+
+@pytest.mark.parametrize("order_seed", [0, 3])
+def test_engine_streams_identical_across_sync_every(backbone, order_seed):
+    cfg, model, params, _ = backbone
+    reqs = _requests(cfg, 5)
+    order = np.random.default_rng(order_seed).permutation(len(reqs))
+    base = None
+    for s in (1, 2, 8):
+        eng, streams = _serve(model, params, reqs, order,
+                              num_slots=2, sync_every=s)
+        if base is None:
+            base = streams
+        else:
+            assert streams == base, f"sync_every={s} diverged"
+        assert eng.stats["host_syncs"] == eng.stats["dispatches"]
+
+
+@pytest.mark.parametrize("kv_pages", [40, 16])
+def test_engine_paged_streams_identical_across_sync_every(backbone, kv_pages):
+    """Ample pool, and a pool tight enough to force preemption mid-run:
+    the fused superstep must stay lossless in both regimes (admission
+    provisions the full first-superstep horizon, growth covers the rest)."""
+    cfg, model, params, _ = backbone
+    reqs = _requests(cfg, 5, seed=2)
+    order = range(len(reqs))
+    base = None
+    for s in (1, 8):
+        eng, streams = _serve(model, params, reqs, order, num_slots=2,
+                              cache_len=40, kv_pages=kv_pages, kv_page_size=4,
+                              sync_every=s)
+        if base is None:
+            base = streams
+        else:
+            assert streams == base, f"paged sync_every={s} diverged"
+        assert eng.kv_stats()["used_pages"] == 0
+
+
+def test_engine_host_syncs_drop_with_sync_every(backbone):
+    cfg, model, params, _ = backbone
+    reqs = _requests(cfg, 4, seed=9)
+    per = {}
+    for s in (1, 8):
+        eng, _ = _serve(model, params, reqs, range(len(reqs)),
+                        num_slots=2, sync_every=s)
+        d = eng.dispatch_stats()
+        assert d["sync_every"] == s
+        per[s] = d["host_syncs_per_100_blocks"]
+        assert eng.stats["blocks"] > 0
+    assert per[8] <= per[1] / 5, (
+        f"sync_every=8 should cut host syncs >=5x: {per}")
+
+
+def test_latency_rolling_window(backbone):
+    cfg, model, params, _ = backbone
+    reqs = _requests(cfg, 6, seed=4)
+    state = online.init_trainer(model, jax.random.PRNGKey(3))
+    eng = ServingEngine(model, params, state, scheduler="continuous",
+                        num_slots=2, max_new=6, latency_window=3)
+    for r in reqs:
+        eng.submit(r)
+    outs = eng.run(max_steps=2000)
+    assert len(outs) == len(reqs)
+    assert len(eng.stats["latencies"]) == 3      # capped at the window
+    lat = eng.latency_percentiles()
+    assert lat["p95_s"] >= lat["p50_s"] > 0.0
+    assert eng.stats["requests"] == len(reqs)    # counters keep the truth
+
+
+def test_grow_pages_capped_by_remaining_budget(backbone):
+    """A lane with 2 tokens of budget left must NOT be grown to the full
+    sync_every-block horizon: peak pool usage stays near prompt + one
+    block, far below prompt + sync_every*(K+1)."""
+    cfg, model, params, _ = backbone
+    K = cfg.dvi.k_spec
+    Tp, ps = 8, 4
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(0), (Tp,), 2,
+                                           cfg.vocab_size), np.int32)
+    state = online.init_trainer(model, jax.random.PRNGKey(3))
+    eng = ServingEngine(model, params, state, scheduler="continuous",
+                        num_slots=1, max_new=2, cache_len=40, sync_every=8,
+                        kv_pages=64, kv_page_size=ps)
+    eng.submit(Request(uid=0, prompt=prompt, max_new=2))
+    outs = eng.run(max_steps=100)
+    assert len(outs) == 1
+    capped = pages_for(Tp - 1 + (2 + K) + 1, ps)          # budget-capped
+    uncapped = pages_for(Tp - 1 + 8 * (K + 1) + 1, ps)    # full horizon
+    peak = eng.kv_stats()["peak_used_pages"]
+    assert peak <= capped, f"peak {peak} > budget-capped bound {capped}"
+    assert peak < uncapped
