@@ -20,6 +20,13 @@ more concurrent requests per byte (the ``admitted_per_gb`` column).  All
 arms run the same unified ``spec_block_step`` core with online drafter
 updates.
 
+The ``mixed-*`` arms race a long/short mixed-prompt trace with one-shot
+vs chunked prefill (``--prefill-chunk``): chunking bounds the engine-tick
+cadence (the ``tick_p95_ms`` / ``tick_max_ms`` jitter columns) because a
+long prompt prefills one chunk per tick between decode supersteps instead
+of stalling admission for its whole prefill — with, again, bit-identical
+token streams (hard-asserted).
+
   PYTHONPATH=src python benchmarks/serving_bench.py            # full
   PYTHONPATH=src python benchmarks/serving_bench.py --smoke    # CI job
   PYTHONPATH=src python benchmarks/serving_bench.py --paged --json out.json
@@ -34,6 +41,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import time
 
 import jax
@@ -47,6 +55,22 @@ from repro.serving.kv_pool import pages_for
 
 PROMPT_LENS = (8, 12, 16)
 MAX_NEWS = (8, 16, 24)
+# long/short mix for the chunked-prefill jitter arm: every third request
+# carries a prompt several chunks long, stalling admission ticks unless
+# prefill is chunked
+MIXED_SHORT, MIXED_LONG = 8, 48
+# bench-trajectory artifact schema; bump when record keys change shape so
+# scripts/check_bench_regression.py can refuse incomparable baselines
+SCHEMA_VERSION = 2
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            stderr=subprocess.DEVNULL).decode().strip()
+    except Exception:
+        return "unknown"
 
 
 def build_trace(n, rate_hz, tasks, vocab, seed=0):
@@ -58,6 +82,21 @@ def build_trace(n, rate_hz, tasks, vocab, seed=0):
         tp = int(rng.choice(PROMPT_LENS))
         prompt = tasks.sample(rng.choice(["qa", "math"]), 1, tp,
                               seed=5000 + i)[0]
+        trace.append((float(t[i]), Request(uid=i, prompt=prompt,
+                                           max_new=int(rng.choice(MAX_NEWS)))))
+    return trace
+
+
+def build_mixed_trace(n, rate_hz, tasks, seed=0):
+    """Poisson arrivals mixing long prompts (every 3rd request) with short
+    ones — the head-of-line workload chunked prefill exists for."""
+    rng = np.random.default_rng(seed + 17)
+    t = np.cumsum(rng.exponential(1.0 / rate_hz, n))
+    trace = []
+    for i in range(n):
+        tp = MIXED_LONG if i % 3 == 0 else MIXED_SHORT
+        prompt = tasks.sample(rng.choice(["qa", "math"]), 1, tp,
+                              seed=7000 + i)[0]
         trace.append((float(t[i]), Request(uid=i, prompt=prompt,
                                            max_new=int(rng.choice(MAX_NEWS)))))
     return trace
@@ -129,6 +168,10 @@ def report(name, eng, done, makespan, busy_s, token_budget=0):
            "host_wait_frac": eng.stats["sync_wait_s"] / max(busy_s, 1e-9)}
     if eng.scheduler == "continuous":
         rec["dispatch"] = eng.dispatch_stats()
+        tick = eng.tick_percentiles()
+        rec["tick_p50_ms"] = tick["p50_s"] * 1e3
+        rec["tick_p95_ms"] = tick["p95_s"] * 1e3
+        rec["tick_max_ms"] = tick["max_s"] * 1e3
     if token_budget:
         gb = token_budget * kv_bytes_per_token(eng.model.cfg) / 2**30
         rec["kv_budget_tokens"] = token_budget
@@ -156,6 +199,9 @@ def main():
     ap.add_argument("--num-slots", type=int, default=8)
     ap.add_argument("--sync-every", type=int, default=8,
                     help="blocks fused per device sync in the fused arm")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="chunk size for the mixed-trace chunked-prefill "
+                         "arm (0 disables the mixed arms)")
     ap.add_argument("--kv-page-size", type=int, default=8)
     ap.add_argument("--kv-pages", type=int, default=0,
                     help="paged arm pool size (0 = match contiguous memory)")
@@ -216,6 +262,42 @@ def main():
     summary = {"fused_speedup_blocks_per_s": fused_speedup,
                "host_sync_reduction": sync_cut, "streams_match": match}
 
+    # mixed long/short-prompt trace: block-step cadence jitter with and
+    # without chunked prefill.  Runs at a small superstep (latency-lean
+    # serving) — that is where one-shot prefill stalls hurt the cadence
+    # most.  The chunked arm must emit bit-identical streams.
+    if args.prefill_chunk:
+        C, Sm = args.prefill_chunk, 2
+        n_mixed = max(6, n // 2)
+        mixed = build_mixed_trace(n_mixed, rate, tasks, seed=args.seed)
+        warm_mixed = [(0.0, Request(uid=10**6 + 50 + j,
+                                    prompt=tasks.sample("qa", 1, tp,
+                                                        seed=90 + j)[0],
+                                    max_new=4))
+                      for j, tp in enumerate((MIXED_SHORT, MIXED_LONG))]
+        m1 = run_trace("continuous", model, params, mixed, slots, args.batch,
+                       warm=warm_mixed, engine_kw={"sync_every": Sm})
+        mC = run_trace("continuous", model, params, mixed, slots, args.batch,
+                       warm=warm_mixed, engine_kw={"sync_every": Sm,
+                                                   "prefill_chunk": C})
+        recs.append(report(f"mixed-fused-s{Sm}", *m1))
+        recs.append(report(f"mixed-chunked-c{C}", *mC))
+        mixed_match = streams(m1[1]) == streams(mC[1])
+        j0, jC = recs[-2], recs[-1]
+        print(f"# mixed trace (chunk={C}): tick p95 "
+              f"{j0['tick_p95_ms']:.0f}ms -> {jC['tick_p95_ms']:.0f}ms, "
+              f"max {j0['tick_max_ms']:.0f}ms -> {jC['tick_max_ms']:.0f}ms, "
+              f"chunk_steps={jC['dispatch']['prefill_chunks']}, "
+              f"streams_match={mixed_match}")
+        summary["prefill"] = {
+            "chunk": C, "streams_match": mixed_match,
+            "tick_p95_ms_oneshot": j0["tick_p95_ms"],
+            "tick_p95_ms_chunked": jC["tick_p95_ms"],
+            "tick_max_ms_oneshot": j0["tick_max_ms"],
+            "tick_max_ms_chunked": jC["tick_max_ms"],
+        }
+        match = match and mixed_match
+
     if args.paged:
         pages = args.kv_pages or pages_for(budget, args.kv_page_size)
         recs.append(report("paged", *run_trace(
@@ -234,7 +316,12 @@ def main():
 
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"arms": recs, "requests": n, "rate_hz": rate,
+            # schema_version + git_sha stamp: bench-trajectory artifacts
+            # from different PRs must be comparable (and refusable when
+            # the schema moved) by scripts/check_bench_regression.py
+            json.dump({"schema_version": SCHEMA_VERSION,
+                       "git_sha": git_sha(),
+                       "arms": recs, "requests": n, "rate_hz": rate,
                        "sync_every": S, "fused": summary,
                        "backbone": cfg.name,
                        "kv_bytes_per_token": kv_bytes_per_token(cfg)}, f,

@@ -1,0 +1,153 @@
+#!/usr/bin/env python
+"""Bench-regression gate for CI: compare a fresh serving_bench --json record
+against the committed baseline and FAIL (exit 1) when
+
+* the ``continuous-fused`` arm's ``blocks_per_s`` regressed more than
+  ``--tolerance`` (default 20%) vs ``benchmarks/baseline.json``,
+* the WITHIN-RUN fusion speedup ratio (``fused_speedup_blocks_per_s`` —
+  fused vs per-block arm on the same machine in the same run, so immune
+  to runner hardware variance) regressed more than ``--tolerance``, or
+* any stream-identity check in the run came back false (``streams_match``
+  for the fused arm, and the mixed chunked-prefill arm when present) —
+  losslessness is a correctness property, not a perf number.
+
+Also prints a trajectory delta table, appended to ``$GITHUB_STEP_SUMMARY``
+when set so the bench trajectory is readable from the PR checks page.
+
+Usage (exactly what CI runs):
+
+  PYTHONPATH=src python benchmarks/serving_bench.py --smoke --paged \
+      --json bench-smoke.json
+  python scripts/check_bench_regression.py bench-smoke.json \
+      --baseline benchmarks/baseline.json
+
+Refreshing the baseline: download ``bench-smoke.json`` from a recent green
+run's ``bench-trajectory`` artifact (CI uploads it every run) and commit it
+over ``benchmarks/baseline.json`` — a CI-produced baseline keeps the
+absolute ``blocks_per_s`` comparison on CI-runner hardware, where it is
+meaningful.  A locally produced baseline also works (the within-run ratio
+check is hardware-independent either way) but makes the absolute check
+noisier — in particular, the FIRST CI run after seeding the baseline from
+a dev machine may trip the absolute check on hardware delta alone; refresh
+from that run's artifact and it stabilizes.  Keep the ``git_sha``/``schema_version`` stamp — it records where
+the numbers came from; only baselines with the same ``schema_version`` are
+accepted.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def fused_arm(rec: dict) -> dict:
+    """The continuous-fused arm is the serving hot path the gate guards."""
+    arms = [a for a in rec.get("arms", [])
+            if a["scheduler"].startswith("continuous-fused")]
+    if not arms:
+        raise SystemExit("no continuous-fused arm in the bench record")
+    return arms[0]
+
+
+def collect_rows(cur: dict, base: dict):
+    """(metric, baseline, current, delta%) rows for the summary table."""
+    fc, fb = fused_arm(cur), fused_arm(base)
+
+    def pct(new, old):
+        return 100.0 * (new - old) / old if old else float("nan")
+
+    rows = [("fused blocks_per_s", fb["blocks_per_s"], fc["blocks_per_s"],
+             pct(fc["blocks_per_s"], fb["blocks_per_s"]))]
+    for key, label in (("tok_per_s", "fused tok_per_s"),
+                       ("p95_ms", "fused p95_ms"),
+                       ("acceptance", "fused acceptance")):
+        if key in fc and key in fb:
+            rows.append((label, fb[key], fc[key], pct(fc[key], fb[key])))
+    sc = cur.get("fused", {}).get("fused_speedup_blocks_per_s")
+    sb = base.get("fused", {}).get("fused_speedup_blocks_per_s")
+    if sc and sb:
+        rows.append(("within-run fusion speedup (x)", sb, sc, pct(sc, sb)))
+    pc = cur.get("fused", {}).get("prefill") or {}
+    pb = base.get("fused", {}).get("prefill") or {}
+    if pc.get("tick_p95_ms_chunked") and pb.get("tick_p95_ms_chunked"):
+        rows.append(("mixed tick_p95_ms (chunked)",
+                     pb["tick_p95_ms_chunked"], pc["tick_p95_ms_chunked"],
+                     pct(pc["tick_p95_ms_chunked"],
+                         pb["tick_p95_ms_chunked"])))
+    return rows
+
+
+def render(rows, cur, base, failures) -> str:
+    out = ["### Serving bench trajectory",
+           f"current `{cur.get('git_sha', '?')}` vs baseline "
+           f"`{base.get('git_sha', '?')}` "
+           f"(schema v{cur.get('schema_version', '?')})", "",
+           "| metric | baseline | current | delta |",
+           "|---|---:|---:|---:|"]
+    for label, b, c, d in rows:
+        out.append(f"| {label} | {b:.3f} | {c:.3f} | {d:+.1f}% |")
+    out.append("")
+    out.append("**FAIL**: " + "; ".join(failures) if failures
+               else "**PASS**: no regression beyond tolerance, streams match")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="bench --json output to check")
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="max allowed fractional blocks_per_s regression")
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    failures = []
+    if cur.get("schema_version") != base.get("schema_version"):
+        raise SystemExit(
+            f"baseline schema v{base.get('schema_version')} != current "
+            f"v{cur.get('schema_version')}: refresh benchmarks/baseline.json "
+            "(see this script's docstring)")
+
+    if not cur.get("fused", {}).get("streams_match", False):
+        failures.append("fused arm token streams diverged from per-block "
+                        "scheduling (streams_match=false)")
+    prefill = cur.get("fused", {}).get("prefill")
+    if prefill is not None and not prefill.get("streams_match", False):
+        failures.append("chunked-prefill arm token streams diverged from "
+                        "one-shot prefill (streams_match=false)")
+
+    fc, fb = fused_arm(cur), fused_arm(base)
+    regress = (fb["blocks_per_s"] - fc["blocks_per_s"]) / fb["blocks_per_s"]
+    if regress > args.tolerance:
+        failures.append(
+            f"fused blocks_per_s regressed {regress:.1%} "
+            f"({fb['blocks_per_s']:.1f} -> {fc['blocks_per_s']:.1f}), "
+            f"tolerance {args.tolerance:.0%}")
+
+    # hardware-independent backstop: the fused-vs-per-block speedup is a
+    # ratio of two arms measured in the SAME run on the SAME machine
+    sc = cur.get("fused", {}).get("fused_speedup_blocks_per_s")
+    sb = base.get("fused", {}).get("fused_speedup_blocks_per_s")
+    if sc and sb:
+        ratio_regress = (sb - sc) / sb
+        if ratio_regress > args.tolerance:
+            failures.append(
+                f"within-run fusion speedup regressed {ratio_regress:.1%} "
+                f"({sb:.2f}x -> {sc:.2f}x), tolerance {args.tolerance:.0%}")
+
+    report = render(collect_rows(cur, base), cur, base, failures)
+    print(report)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(report + "\n")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+#!/usr/bin/env python
+"""Append a one-row pass-count table for a pytest junitxml report to the
+GitHub Actions job summary (``$GITHUB_STEP_SUMMARY``); prints to stdout
+when run outside Actions.
+
+  python scripts/ci_summary.py pytest-report.xml "tier1 py3.12 jax-latest"
+"""
+from __future__ import annotations
+
+import os
+import sys
+import xml.etree.ElementTree as ET
+
+
+def main():
+    xml_path, label = sys.argv[1], sys.argv[2]
+    try:
+        root = ET.parse(xml_path).getroot()
+    except (OSError, ET.ParseError) as e:
+        row = f"| {label} | — | — | — | — | report missing ({e}) |"
+    else:
+        suite = root if root.tag == "testsuite" else root.find("testsuite")
+        tests = int(suite.get("tests", 0))
+        errors = int(suite.get("errors", 0))
+        failures = int(suite.get("failures", 0))
+        skipped = int(suite.get("skipped", 0))
+        passed = tests - errors - failures - skipped
+        t = float(suite.get("time", 0.0))
+        row = (f"| {label} | {passed} | {failures + errors} | {skipped} "
+               f"| {t:.0f}s | {'✅' if failures + errors == 0 else '❌'} |")
+    header = ("| job | passed | failed | skipped | time | ok |\n"
+              "|---|---:|---:|---:|---:|:--:|\n")
+    out = os.environ.get("GITHUB_STEP_SUMMARY")
+    if out:
+        # write the header once per summary file, then one row per job step
+        first = not (os.path.exists(out) and "| job | passed |"
+                     in open(out).read())
+        with open(out, "a") as f:
+            f.write((header if first else "") + row + "\n")
+    print(header + row)
+
+
+if __name__ == "__main__":
+    main()

@@ -154,6 +154,13 @@ def spec_block_step(model: Model, params: dict, dvi_params: dict,
     done = jnp.zeros((B,), bool) if done is None else done
     t0 = cache["lengths"]
 
+    # done lanes must not advance draft state: a masked lane may be a lane
+    # mid-chunked-prefill that will resume EXACTLY where it stopped, so its
+    # stateful-mixer conv/state (which draft commits would otherwise evolve
+    # on garbage pending tokens) and its draft lengths stay frozen.  Eager
+    # attention writes still land but are rolled back by length masking.
+    draft_accept = jnp.where(done, 0, 1).astype(jnp.int32)
+
     def draft_iter(carry, _):
         cache_c, pend, k_ = carry
         x = model.embed_block(params, pend[:, None], cache_c["lengths"])
@@ -166,8 +173,7 @@ def spec_block_step(model: Model, params: dict, dvi_params: dict,
         else:
             dprobs = jnp.zeros((B, 1), jnp.float32)     # unused placeholder
             d_tok = jnp.argmax(dlog, axis=-1).astype(jnp.int32)
-        cache3 = tfm.commit_cache(cfg, cache2, cands,
-                                  jnp.ones((B,), jnp.int32))
+        cache3 = tfm.commit_cache(cfg, cache2, cands, draft_accept)
         return (cache3, d_tok, k_), (h_k[:, 0], d_tok, dprobs, cands)
 
     (cache_d, _, key), (hk_s, d_s, dp_s, cand_stack) = jax.lax.scan(

@@ -54,6 +54,11 @@ def main():
                     help=">0: paged KV cache with this many pool pages")
     ap.add_argument("--kv-page-size", type=int, default=16,
                     help="tokens per KV page (paged mode)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help=">0: prefill prompts in chunks of this many tokens "
+                         "interleaved with decode supersteps (bounds "
+                         "block-step jitter under long prompts; streams "
+                         "stay bit-identical to one-shot prefill)")
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--shift-at", type=int, default=0,
@@ -76,7 +81,8 @@ def main():
                         max_new=args.max_new, learn=not args.no_learn,
                         buckets=(args.prompt_len,), kv_pages=args.kv_pages,
                         kv_page_size=args.kv_page_size,
-                        sync_every=args.sync_every)
+                        sync_every=args.sync_every,
+                        prefill_chunk=args.prefill_chunk)
     t0 = time.time()
     done = []
     for i in range(args.requests):
@@ -101,6 +107,14 @@ def main():
               f"host_syncs/100blk={d['host_syncs_per_100_blocks']:.1f} "
               f"host_wait={d['host_wait_s']:.2f}s "
               f"dispatches={d['dispatches']}")
+        if args.prefill_chunk:
+            tk = eng.tick_percentiles()
+            print(f"[serve] chunked prefill: chunk={d['prefill_chunk']} "
+                  f"chunk_steps={d['prefill_chunks']} "
+                  f"prefill_tokens={d['prefill_tokens']} "
+                  f"max_tick_prefill_tokens={d['max_tick_prefill_tokens']} "
+                  f"tick p50={tk['p50_s']*1e3:.0f}ms "
+                  f"p95={tk['p95_s']*1e3:.0f}ms max={tk['max_s']*1e3:.0f}ms")
     if args.kv_pages:
         kv = eng.kv_stats()
         print(f"[serve] paged KV: peak_util={kv['peak_utilization']:.2f} "

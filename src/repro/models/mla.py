@@ -91,8 +91,8 @@ def mla_step(p: dict, xn: jax.Array, cache_ckv, cache_krope, lengths,
     ckv, krope = _latents(p, xn, positions, rope_theta)
 
     from repro.models.transformer import spread_write
-    new_ckv = spread_write(cache_ckv, ckv, lengths)
-    new_krope = spread_write(cache_krope, krope, lengths)
+    new_ckv = spread_write(cache_ckv, ckv, lengths, wrap=False)
+    new_krope = spread_write(cache_krope, krope, lengths, wrap=False)
 
     # absorb W_uk into q:  q_eff[b,t,h,:] = q_nope · W_uk_h  -> (B,T,H,r_kv)
     w_uk = p["w_uk"].reshape(r_kv, H, dn)

@@ -179,6 +179,28 @@ class Model:
         cache = tfm.fill_cache_from_full(cfg, cache, contribs, T)
         return h, cache, enc
 
+    def prefill_chunk(self, params, tokens, cache, take=None):
+        """Resume a chunked prefill: process `tokens` (B, T) at positions
+        ``cache["lengths"] .. +T-1`` against a partially-built cache and
+        commit ``take`` (B,) of them per lane (default: all T).  Runs the
+        block-decode path over the FULL stack, so it works against both
+        contiguous and paged layouts and carries stateful-mixer conv/state
+        exactly — a cache built by ``prefill(first chunk)`` +
+        ``prefill_chunk(rest)`` decodes bit-identically to one-shot
+        ``prefill`` (tested in tests/test_chunked_prefill.py).
+
+        ``take < T`` supports ragged last chunks in a fixed-shape batched
+        call: positions past ``take`` are padding whose eager cache writes
+        are rolled back by length masking, exactly like rejected
+        speculative tokens.  ``take = 0`` leaves a lane untouched (riding
+        lanes in a batched chunk step).  Returns (h, cache)."""
+        B, T = tokens.shape
+        take = (jnp.full((B,), T, jnp.int32) if take is None
+                else take.astype(jnp.int32))
+        x = self.embed_block(params, tokens, cache["lengths"])
+        h, cache2, cands, _ = self.step(params, x, cache)
+        return h, tfm.commit_cache(self.cfg, cache2, cands, take)
+
     def step(self, params, x, cache, lo: int = 0, hi: Optional[int] = None):
         """Block-decode layers [lo,hi) on embedded block x (B,T,d)."""
         hi = self.cfg.num_layers if hi is None else hi

@@ -267,13 +267,20 @@ def kv_dequantize(q, scale, dtype):
     return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
 
-def spread_write(cache, blk, lengths):
-    """Write blk (B,T,...) into cache (B,C,...) at ring slots
-    (lengths + i) mod C via an elementwise select (sharding-preserving)."""
+def spread_write(cache, blk, lengths, wrap: bool = True):
+    """Write blk (B,T,...) into cache (B,C,...) at slots lengths + i via an
+    elementwise select (sharding-preserving).  ``wrap=True`` (ring caches):
+    slots are (lengths + i) mod C.  ``wrap=False`` (full / MLA caches, where
+    slot index == absolute position): out-of-capacity writes are DROPPED —
+    a position past C can only ever be an eager speculative / chunk-padding
+    write that rollback would discard anyway, and wrapping it would clobber
+    committed slots near 0."""
     B, C = cache.shape[:2]
     T = blk.shape[1]
-    rel = (jnp.arange(C)[None, :] - lengths[:, None]) % C     # (B,C)
-    mask = rel < T
+    rel = jnp.arange(C)[None, :] - lengths[:, None]           # (B,C)
+    if wrap:
+        rel = rel % C
+    mask = (rel >= 0) & (rel < T)
     idx = jnp.clip(rel, 0, T - 1)
     idx = idx.reshape(idx.shape + (1,) * (cache.ndim - 2))
     src = jnp.take_along_axis(blk, idx, axis=1)
@@ -312,19 +319,21 @@ def attn_layer_step(p, x, kcache, vcache, slot_pos, lengths, cfg: ModelConfig,
     # falls in [0, T).  Pure elementwise select, so a sequence-sharded cache
     # stays sharded (a scatter at traced per-seq indices would force GSPMD
     # to regather the whole cache — 10x per-device memory at 32k decode).
+    # Only rings wrap; full caches clip out-of-capacity eager writes.
+    wrap = W > 0
     new_ks = new_vs = None
     if cfg.kv_quant:
         kq, ks_blk = kv_quantize(k)
         vq, vs_blk = kv_quantize(v)
-        new_k = spread_write(kcache, kq, lengths)
-        new_v = spread_write(vcache, vq, lengths)
-        new_ks = spread_write(kscale, ks_blk, lengths)
-        new_vs = spread_write(vscale, vs_blk, lengths)
+        new_k = spread_write(kcache, kq, lengths, wrap)
+        new_v = spread_write(vcache, vq, lengths, wrap)
+        new_ks = spread_write(kscale, ks_blk, lengths, wrap)
+        new_vs = spread_write(vscale, vs_blk, lengths, wrap)
         k_eff = kv_dequantize(new_k, new_ks, x.dtype)
         v_eff = kv_dequantize(new_v, new_vs, x.dtype)
     else:
-        new_k = spread_write(kcache, k, lengths)
-        new_v = spread_write(vcache, v, lengths)
+        new_k = spread_write(kcache, k, lengths, wrap)
+        new_v = spread_write(vcache, v, lengths, wrap)
         k_eff, v_eff = new_k, new_v
 
     mask = (slot_pos[:, None, :] <= qpos[:, :, None]) & (slot_pos[:, None, :] >= 0)
@@ -543,8 +552,11 @@ def run_segment_step(sp, x, seg_cache, cross_cache, lengths, cfg: ModelConfig,
     if seg.kind == "local":
         W = cfg.rglru.local_window if cfg.rglru is not None else cfg.sliding_window
     qpos = lengths[:, None] + jnp.arange(T)[None, :]
-    rel = (jnp.arange(C)[None, :] - lengths[:, None]) % C
-    new_pos = jnp.where(rel < T, lengths[:, None] + rel, seg_cache["pos"])
+    rel = jnp.arange(C)[None, :] - lengths[:, None]
+    if W:
+        rel = rel % C
+    new_pos = jnp.where((rel >= 0) & (rel < T), lengths[:, None] + rel,
+                        seg_cache["pos"])
 
     quant = cfg.kv_quant
 
@@ -771,14 +783,18 @@ def insert_slot(cfg: ModelConfig, cache: dict, src: dict, slot,
                 src_slot: int = 0) -> dict:
     """Continuous-batching cache surgery: copy sequence lane `src_slot` of
     cache `src` (e.g. a freshly prefilled B=1 contiguous cache) into lane
-    `slot` of a live batched cache.  Per-slot leaves — attention KV (ring or
-    full), quant scales, slot positions, cross-attention KV, and
-    stateful-mixer conv/state — must share capacities with `cache`; only the
-    batch lane differs.  Paged full-attention segments instead scatter the
-    source KV through the slot's block-table row (map the pages with
-    ``map_slot_pages`` first); the source contiguous capacity only needs to
-    cover the prompt, not the worst case.  `slot` may be a traced scalar, so
-    admission jits once per prompt shape."""
+    `slot` of a live batched cache.  The source may be PARTIALLY BUILT: its
+    per-slot sequence capacities (attention KV, quant scales, slot
+    positions, MLA latents) only need to cover what was actually prefilled
+    — e.g. a chunk-sized scratch holding the first prefill chunk — and are
+    spliced into the lane's prefix; the destination lane must have been
+    reset (``reset_slot``), so its tail is already inert (pos = -1, zero
+    states).  Constant-size leaves (ring buffers, stateful-mixer
+    conv/state, cross-attention KV) must share capacities exactly.  Paged
+    full-attention segments instead scatter the source KV through the
+    slot's block-table row (map the pages with ``map_slot_pages`` first).
+    `slot` may be a traced scalar, so admission jits once per prompt (or
+    chunk) shape."""
     tbl = cache.get("tbl")
     new_segs = {}
     for name, seg_c in cache["segs"].items():
@@ -791,8 +807,10 @@ def insert_slot(cfg: ModelConfig, cache: dict, src: dict, slot,
         for kname, leaf in seg_c.items():
             ax = _slot_axis(kname)
             piece = jax.lax.dynamic_slice_in_dim(src_c[kname], src_slot, 1, ax)
-            out[kname] = jax.lax.dynamic_update_slice_in_dim(
-                leaf, piece.astype(leaf.dtype), slot, ax)
+            starts = [0] * leaf.ndim
+            starts[ax] = slot
+            out[kname] = jax.lax.dynamic_update_slice(
+                leaf, piece.astype(leaf.dtype), tuple(starts))
         new_segs[name] = out
     ln = jax.lax.dynamic_slice_in_dim(src["lengths"], src_slot, 1, 0)
     lengths = jax.lax.dynamic_update_slice_in_dim(cache["lengths"], ln, slot, 0)

@@ -58,6 +58,35 @@ and scheduling becomes memory-aware:
 * retirement frees the lane's pages (``reset_slot`` just unmaps the
   block-table row; no KV bytes move).
 
+With ``prefill_chunk > 0`` prompt prefill is **chunked and scheduled**
+instead of one-shot-on-admission, so a single long prompt can no longer
+stall every live lane for its whole prefill:
+
+* admission only prefills the FIRST chunk (into a chunk-sized scratch,
+  spliced with ``insert_slot`` — which accepts the partially-built cache)
+  and parks the lane in a PREFILL state: ``done``-masked, it rides along
+  inert through supersteps (``spec_block_step`` freezes masked lanes'
+  stateful-mixer state and cache length, so the partial prefill survives
+  untouched),
+* every tick, ONE batched **chunk step** (``model.prefill_chunk``) advances
+  all prefilling lanes by up to ``prefill_chunk`` tokens each, directly in
+  the live cache (contiguous or paged) — the per-tick prefill work is
+  bounded by ``num_slots * prefill_chunk`` tokens regardless of prompt
+  length, and decode supersteps keep firing between chunks,
+* a lane that consumes its last chunk flips live the SAME tick and enters
+  that tick's superstep (its pending token is set in-graph by the chunk
+  step), so chunking adds no extra tick of completion latency,
+* paged mode provisions pages chunk-by-chunk (``KVPool.ensure``) instead
+  of whole-prompt at admission — admission is gated on the first chunk's
+  pages against the watermark; later chunks are growth-class allocations
+  that, like decode page growth, may dip into the watermark headroom —
+  and a mid-prefill lane is preemptible exactly like a decode lane: its
+  pages are freed and its request re-queued at the FIFO front (lossless —
+  no tokens were generated),
+* committed token streams are bit-identical to one-shot prefill (greedy
+  and sampled, both layouts — tested): the chunk step is the same decode
+  math at the same positions, only scheduled differently.
+
 ``scheduler="sync"`` keeps the legacy batch-synchronous path (bucket by
 prompt length, decode a whole batch to completion with
 ``speculative_generate``) for comparison — ``benchmarks/serving_bench.py``
@@ -109,6 +138,8 @@ class _Slot:
     wall_s: float = 0.0
     cache_len: int = 0            # committed cache length (paged growth)
     admit_seq: int = 0            # admission order (paged preemption picks max)
+    pf_prompt: Optional[np.ndarray] = None  # trimmed replay source (chunked)
+    pf_pos: Optional[int] = None  # prompt tokens prefilled; None = decoding
 
 
 @dataclass
@@ -133,17 +164,26 @@ class ServingEngine:
     kv_pages: int = 0             # >0: paged KV pool with this many pages
     kv_page_size: int = 16        # tokens per page (paged mode)
     kv_watermark: int = 0         # pages kept free at admission (paged mode)
+    prefill_chunk: int = 0        # >0: prefill in chunks of this many tokens
     _queue: Dict[int, List[Request]] = field(default_factory=dict)
     _fifo: deque = field(default_factory=deque)
     stats: dict = field(default_factory=lambda: {
         "requests": 0, "blocks": 0, "steps": 0, "committed": 0,
         "accepted": 0, "drafted": 0, "updates": 0, "preemptions": 0,
         "peak_live_slots": 0, "host_syncs": 0, "sync_wait_s": 0.0,
-        "dispatches": 0, "latencies": []})
+        "dispatches": 0, "prefill_chunks": 0, "prefill_tokens": 0,
+        "max_tick_prefill_tokens": 0, "latencies": [], "tick_s": []})
 
     def __post_init__(self):
         model, cfg = self.model, self.model.cfg
         K = cfg.dvi.k_spec
+        if self.prefill_chunk and self.scheduler != "continuous":
+            raise ValueError("chunked prefill requires scheduler='continuous'")
+        # ring caches absorb at most RING_SLACK eager tokens beyond the live
+        # window, and idle lanes see a chunk step's writes as eager garbage
+        # (rolled back by length masking, like rejected speculative tokens) —
+        # so the chunk is clamped to the slack the rollback rule guarantees
+        self._chunk = min(max(0, int(self.prefill_chunk)), tfm.RING_SLACK)
         self._cap = self.cache_len or (max(self.buckets) + self.max_new
                                        + K + 2 + tfm.RING_SLACK)
         self._update_fn = online_mod.make_update_fn(self.model, self.mode,
@@ -161,6 +201,8 @@ class ServingEngine:
         self._blocks_since_update = 0
         self.stats["latencies"] = deque(self.stats["latencies"],
                                         maxlen=self.latency_window)
+        self.stats["tick_s"] = deque(self.stats["tick_s"],
+                                     maxlen=self.latency_window)
 
         # ONE jitted generation entry point (jit shape-specializes on
         # `prompts`, so per-bucket closure caching was pure duplication);
@@ -234,6 +276,26 @@ class ServingEngine:
                 pending, prompt[-1:], slot, 0)
             return pending, cache
         self._admit_paged_fn = jax.jit(admit_paged)
+
+        def admit_chunk(params, cache, chunk, slot):
+            # chunked admission (contiguous): prefill ONLY the first chunk
+            # into a chunk-sized scratch — admission device work is O(chunk),
+            # not O(prompt) — and splice the partially-built cache into the
+            # (reset, hence inert-tailed) lane
+            _, pc, _ = model.prefill(params, chunk[None, :],
+                                     max_len=chunk.shape[0])
+            return tfm.insert_slot(cfg, cache, pc, slot)
+        self._admit_chunk_fn = jax.jit(admit_chunk)
+
+        def chunk_step(params, cache, pending, tokens, take, finish_tok,
+                       finished):
+            # ONE batched prefill-chunk step: every prefilling lane advances
+            # by take[s] tokens (0 = lane rides along untouched); lanes that
+            # consume their last prompt token get their pending set in-graph
+            # so they can enter THIS tick's superstep
+            _, cache = model.prefill_chunk(params, tokens, cache, take)
+            return jnp.where(finished, finish_tok, pending), cache
+        self._chunk_fn = jax.jit(chunk_step)
 
         self._set_tbl_fn = jax.jit(tfm.set_block_tables)
         self._reset_fn = jax.jit(
@@ -350,11 +412,34 @@ class ServingEngine:
             prompt = np.concatenate(
                 [np.full(2 - len(prompt), prompt[0], np.int32), prompt])
         # oversized prompts keep their suffix (mirrors the sync path's
-        # `_pad` truncation) rather than crashing the serving loop
+        # `_pad` truncation) rather than crashing the serving loop.  A chunk
+        # step's eager writes past a full-length idle lane's committed
+        # prefix need no extra margin here: full caches CLIP out-of-capacity
+        # writes (spread_write wrap=False) instead of ring-wrapping them.
         limit = self._cap - remaining_new - cfg.dvi.k_spec - 2
         if len(prompt) > limit:
             prompt = prompt[-limit:]
         return prompt
+
+    def _first_chunk(self, prompt: np.ndarray) -> int:
+        """Prompt tokens prefilled AT ADMISSION: the whole prompt (minus the
+        pending token) when one-shot or when it fits one chunk; else exactly
+        one chunk, with the rest scheduled tick-by-tick."""
+        n = len(prompt) - 1
+        return min(self._chunk, n) if self._chunk else n
+
+    def _prefill_extent(self, st: _Slot) -> tuple:
+        """(take, finishing, cache extent) for lane `st`'s next prefill
+        chunk.  A finishing chunk must also provision the first-superstep
+        horizon — the lane flips live THIS tick and runs the superstep on
+        this provisioning alone (same rule as one-shot admission)."""
+        rest = len(st.pf_prompt) - 1 - st.pf_pos
+        take = min(self._chunk, rest)
+        extent = st.pf_pos + take
+        finishing = take == rest
+        if finishing:
+            extent += self._superstep_horizon(st.max_new - len(st.gen)) + 1
+        return take, finishing, extent
 
     def _superstep_horizon(self, remaining: int) -> int:
         """Cache slots one superstep can touch beyond a lane's committed
@@ -383,11 +468,29 @@ class ServingEngine:
         for st in self._slots:
             if st is None:
                 continue
+            if st.pf_pos is not None:    # mid-prefill: next chunk's demand
+                continue                 # (counted by _prefill_reserve)
             remaining = st.max_new - len(st.gen)
             if remaining <= 0:
                 continue
             inflight_cap = st.cache_len + self._superstep_horizon(remaining)
             need = self._pages_needed(inflight_cap, remaining)
+            reserve += max(0, need - len(self._pool.owned(st.uid)))
+        return reserve + self._prefill_reserve()
+
+    def _prefill_reserve(self) -> int:
+        """Pages mid-prefill lanes will claim for their NEXT chunk (plus the
+        finishing-chunk superstep horizon).  BOTH admission sites must keep
+        these untouched — ``_advance_prefill`` consumes them right after the
+        post-growth admission, so admitting a request into them would only
+        get it preempted by a senior prefill lane the same tick (a wasted
+        admission prefill per tick for the rest of the long prefill)."""
+        reserve = 0
+        for st in self._slots:
+            if st is None or st.pf_pos is None:
+                continue
+            _, _, extent = self._prefill_extent(st)
+            need = self._pool.pages_for(extent)
             reserve += max(0, need - len(self._pool.owned(st.uid)))
         return reserve
 
@@ -406,14 +509,20 @@ class ServingEngine:
             max_new = min(req.max_new, self.max_new)
             gen_carry = len(self._preempted.get(req.uid, (None, ()))[1])
             prompt = self._trim_prompt(req, max_new - gen_carry)
+            c1 = self._first_chunk(prompt)
+            chunked = c1 < len(prompt) - 1   # rest scheduled tick-by-tick
             if self._cache is None:
                 self._cache = (self.model.init_paged_cache(
                     self.num_slots, self.kv_pages, self.kv_page_size,
                     self._mps) if self.paged
                     else self.model.init_cache(self.num_slots, self._cap))
             if self.paged:
-                need = self._pages_needed(len(prompt) - 1,
-                                          max_new - gen_carry)
+                # mid-prefill lanes only hold pages for what is actually
+                # cached so far; the rest is provisioned chunk-by-chunk by
+                # _advance_prefill (growth-class: like decode page growth
+                # it may dip into the admission watermark's headroom)
+                need = (self._pool.pages_for(c1) if chunked
+                        else self._pages_needed(c1, max_new - gen_carry))
                 if not self._pool.can_alloc(need,
                                             self.kv_watermark + reserve):
                     break                    # head-of-line wait for pages
@@ -422,23 +531,37 @@ class ServingEngine:
                 row = np.full(self._mps, -1, np.int32)
                 row[:len(pages)] = pages
                 self._tbl_host[slot] = row
+                # chunked: prefill just prompt[:c1]; the pending it sets is
+                # a placeholder, rewritten in-graph by the finishing chunk
                 self._pending, self._cache = self._admit_paged_fn(
                     self.params, self._cache, self._pending,
-                    jnp.asarray(prompt), jnp.int32(slot), jnp.asarray(row))
+                    jnp.asarray(prompt[:c1 + 1]), jnp.int32(slot),
+                    jnp.asarray(row))
             else:
                 self._fifo.popleft()
-                self._pending, self._cache = self._admit_fn(
-                    self.params, self._cache, self._pending,
-                    jnp.asarray(prompt), jnp.int32(slot))
-            orig_prompt, gen0, blocks0, wall0 = self._preempted.pop(
-                req.uid, (prompt, [], 0, 0.0))
-            self._admit_seq += 1
+                if chunked:
+                    self._cache = self._admit_chunk_fn(
+                        self.params, self._cache, jnp.asarray(prompt[:c1]),
+                        jnp.int32(slot))
+                else:
+                    self._pending, self._cache = self._admit_fn(
+                        self.params, self._cache, self._pending,
+                        jnp.asarray(prompt), jnp.int32(slot))
+            orig_prompt, gen0, blocks0, wall0, seq0 = self._preempted.pop(
+                req.uid, (prompt, [], 0, 0.0, None))
+            if seq0 is None:             # fresh request; replays keep their
+                self._admit_seq += 1     # original admission seniority
+                seq0 = self._admit_seq
             self._slots[slot] = _Slot(uid=req.uid, prompt=orig_prompt,
                                       max_new=max_new, gen=list(gen0),
                                       blocks=blocks0, wall_s=wall0,
-                                      cache_len=len(prompt) - 1,
-                                      admit_seq=self._admit_seq)
-            self._done[slot] = False
+                                      cache_len=c1,
+                                      admit_seq=seq0,
+                                      pf_prompt=prompt if chunked else None,
+                                      pf_pos=c1 if chunked else None)
+            # a mid-prefill lane stays done-masked: it rides supersteps
+            # inert until its finishing chunk flips it live
+            self._done[slot] = chunked
 
     def _preempt(self, slot: int) -> None:
         """Evict lane `slot` mid-decode: free its pages, unmap its row, and
@@ -449,10 +572,14 @@ class ServingEngine:
         st = self._slots[slot]
         self._pool.free(st.uid)
         self._tbl_host[slot] = -1
-        # carry progress AND cost attribution (blocks, wall) across the
-        # preemption so Completion.mat / wall_s stay truthful
+        # carry progress, cost attribution (blocks, wall) AND admission
+        # seniority across the preemption: re-admission must not make the
+        # victim the "newest" lane again, or two starved lanes ping-pong
+        # preempt each other forever — preserving admit_seq makes the
+        # globally oldest request strictly win every victim contest, so it
+        # always progresses and the system cannot livelock
         self._preempted[st.uid] = (st.prompt, list(st.gen), st.blocks,
-                                   st.wall_s)
+                                   st.wall_s, st.admit_seq)
         combined = np.concatenate(
             [st.prompt, np.asarray(st.gen, np.int32)]).astype(np.int32)
         self._fifo.appendleft(Request(uid=st.uid, prompt=combined,
@@ -478,17 +605,14 @@ class ServingEngine:
         for s in sorted((i for i, st in enumerate(self._slots) if st is not None),
                         key=lambda i: self._slots[i].admit_seq):
             st = self._slots[s]
-            if st is None:
-                continue
+            if st is None or st.pf_pos is not None:
+                continue                 # gone, or grown by _advance_prefill
             remaining = st.max_new - len(st.gen)
             if remaining <= 0:           # retires at the next boundary
                 continue
             while True:
-                have = len(self._pool.owned(st.uid))
-                need = self._pages_needed(st.cache_len, remaining)
-                if need <= have:
-                    break
-                got = self._pool.alloc(need - have, owner=st.uid)
+                got = self._pool.ensure(
+                    st.uid, self._pages_needed(st.cache_len, remaining))
                 if got is None:
                     victims = [i for i, v in enumerate(self._slots)
                                if v is not None and i != s]
@@ -498,13 +622,112 @@ class ServingEngine:
                                       key=lambda i: self._slots[i].admit_seq))
                     dirty = True         # preemption unmapped a row
                     continue
-                owned = self._pool.owned(st.uid)    # allocation order == logical
-                self._tbl_host[s] = -1
-                self._tbl_host[s, :len(owned)] = owned
-                dirty = True
+                if got:
+                    self._sync_row(s, st.uid)
+                    dirty = True
+                break
         if dirty:
             self._cache = self._set_tbl_fn(self._cache,
                                            jnp.asarray(self._tbl_host))
+
+    def _sync_row(self, s: int, uid: int) -> None:
+        """Mirror lane `s`'s pool ownership into the host block table
+        (allocation order == logical order); caller batches the device push
+        via ``set_block_tables`` once per tick."""
+        owned = self._pool.owned(uid)
+        self._tbl_host[s] = -1
+        self._tbl_host[s, :len(owned)] = owned
+
+    def _advance_prefill(self) -> None:
+        """One batched chunk step: every mid-prefill lane advances by up to
+        ``prefill_chunk`` prompt tokens, directly in the live cache.  Lanes
+        consuming their last prompt token get their pending token set
+        in-graph and flip live for THIS tick's superstep.  Paged lanes are
+        provisioned incrementally (``KVPool.ensure``) right before the
+        chunk's writes land; on exhaustion the newest other lane is
+        preempted (oldest-first service, mirroring ``_grow_pages``).
+        Per-tick prefill work is bounded: ONE device dispatch covering at
+        most ``num_slots * prefill_chunk`` tokens, however long the
+        prompts are."""
+        lanes = [s for s, st in enumerate(self._slots)
+                 if st is not None and st.pf_pos is not None]
+        if not lanes:
+            return
+        B, T = self.num_slots, self._chunk
+        tokens = np.zeros((B, T), np.int32)
+        take = np.zeros((B,), np.int32)
+        finish_tok = np.zeros((B,), np.int32)
+        finished = np.zeros((B,), bool)
+        dirty = False
+        for s in sorted(lanes, key=lambda i: self._slots[i].admit_seq):
+            st = self._slots[s]
+            if st is None:               # preempted as a victim below
+                continue
+            tk, fin, extent = self._prefill_extent(st)
+            if self.paged:
+                while True:
+                    got = self._pool.ensure(st.uid,
+                                            self._pool.pages_for(extent))
+                    if got is not None:
+                        break
+                    # a starved prefill lane may only evict STRICTLY NEWER
+                    # lanes; with none it WAITS a tick instead of evicting a
+                    # senior.  Evicting seniors here livelocks: mid-prefill
+                    # eviction loses all prefill progress (decode eviction
+                    # keeps its generated tokens, which is why _grow_pages
+                    # can afford any-victim), so two long prefills sharing a
+                    # tight pool would wipe each other forever at the
+                    # finish line.  Seniority is a total order, so the
+                    # oldest prefill lane can always clear its path, and
+                    # admission sizing guarantees it fits the pool alone.
+                    victims = [i for i, v in enumerate(self._slots)
+                               if v is not None
+                               and v.admit_seq > st.admit_seq]
+                    if not victims:
+                        break
+                    v = max(victims, key=lambda i: self._slots[i].admit_seq)
+                    self._preempt(v)
+                    # victims are strictly newer and this loop runs in
+                    # ascending admit_seq order, so v cannot have been
+                    # staged yet — these clears are pure defense in case a
+                    # future change reorders the loop or widens victimhood
+                    tokens[v] = 0
+                    take[v] = 0
+                    finished[v] = False
+                    dirty = True
+                if got is None:
+                    continue             # starved: retry next tick
+                if got:
+                    self._sync_row(s, st.uid)
+                    dirty = True
+            tokens[s, :tk] = st.pf_prompt[st.pf_pos:st.pf_pos + tk]
+            take[s] = tk
+            if fin:
+                finished[s] = True
+                finish_tok[s] = st.pf_prompt[-1]
+        if dirty:
+            self._cache = self._set_tbl_fn(self._cache,
+                                           jnp.asarray(self._tbl_host))
+        if not take.any():
+            return
+        self._pending, self._cache = self._chunk_fn(
+            self.params, self._cache, self._pending, jnp.asarray(tokens),
+            jnp.asarray(take), jnp.asarray(finish_tok), jnp.asarray(finished))
+        tick_tokens = int(take.sum())
+        self.stats["prefill_chunks"] += 1
+        self.stats["prefill_tokens"] += tick_tokens
+        self.stats["max_tick_prefill_tokens"] = max(
+            self.stats["max_tick_prefill_tokens"], tick_tokens)
+        for s in lanes:
+            st = self._slots[s]
+            if st is None or not take[s]:
+                continue
+            st.pf_pos += int(take[s])
+            st.cache_len += int(take[s])
+            if finished[s]:
+                st.pf_pos = None
+                st.pf_prompt = None
+                self._done[s] = False
 
     def _dispatch_superstep(self) -> None:
         """Dispatch one fused superstep over the live lanes and return
@@ -567,6 +790,8 @@ class ServingEngine:
             st = self._slots[s]          # slots admitted since then (into
             if st is None:               # previously-free lanes) rode along
                 continue                 # masked done and carry no results
+            if st.pf_pos is not None:    # mid-prefill at dispatch: rode the
+                continue                 # superstep masked done — NOT done
             nb = int(blocks_np[s])
             st.blocks += nb
             st.wall_s += wall_share * nb
@@ -613,7 +838,8 @@ class ServingEngine:
         prefill dispatches queue behind the in-flight superstep — host work
         overlaps device compute), harvest the in-flight superstep, retire
         finished lanes, grow paged lanes (preempting if the pool runs dry),
-        admit into freshly freed lanes, and dispatch the next superstep."""
+        admit into freshly freed lanes, advance mid-prefill lanes by one
+        chunk, and dispatch the next superstep."""
         self._tick_t0 = time.perf_counter()
         try:
             # pre-admission reserves the live lanes' worst-case growth
@@ -623,14 +849,23 @@ class ServingEngine:
             outs = self._harvest()
             # grow BEFORE admitting: admission then sees the true residual
             # capacity, instead of grabbing pages that live lanes
-            # immediately claw back by preempting the just-admitted lane
+            # immediately claw back by preempting the just-admitted lane.
+            # Mid-prefill lanes' imminent chunk demand stays reserved even
+            # here: _advance_prefill consumes it right after this admission.
             if self.paged:
                 self._grow_pages()
-            self._admit_waiting()
-            if self.active_slots > 0:
+            self._admit_waiting(self._prefill_reserve() if self.paged else 0)
+            # chunked prefill interleaves with supersteps: one bounded
+            # chunk step per tick, then the superstep over decoding lanes
+            # (lanes whose prefill finished this tick included)
+            self._advance_prefill()
+            if any(st is not None and st.pf_pos is None
+                   for st in self._slots):
                 self._dispatch_superstep()
         finally:
-            self._clock += time.perf_counter() - self._tick_t0
+            dt = time.perf_counter() - self._tick_t0
+            self._clock += dt
+            self.stats["tick_s"].append(dt)
             self._tick_t0 = None
         return outs
 
@@ -671,7 +906,10 @@ class ServingEngine:
                       "committed": 0, "accepted": 0, "drafted": 0,
                       "updates": 0, "preemptions": 0, "peak_live_slots": 0,
                       "host_syncs": 0, "sync_wait_s": 0.0, "dispatches": 0,
-                      "latencies": deque(maxlen=self.latency_window)}
+                      "prefill_chunks": 0, "prefill_tokens": 0,
+                      "max_tick_prefill_tokens": 0,
+                      "latencies": deque(maxlen=self.latency_window),
+                      "tick_s": deque(maxlen=self.latency_window)}
         self._slot_accepted[:] = 0
         self._slot_drafted[:] = 0
 
@@ -705,6 +943,18 @@ class ServingEngine:
                 "p95_s": float(np.percentile(lats, 95)),
                 "mean_s": float(np.mean(lats))}
 
+    def tick_percentiles(self) -> dict:
+        """Engine-tick wall-time percentiles over the most recent
+        ``latency_window`` ticks — the block-step cadence jitter that
+        chunked prefill bounds (a one-shot prefill of a long prompt shows
+        up as one fat tick; chunking spreads it)."""
+        ts = np.asarray(self.stats["tick_s"], np.float64)
+        if ts.size == 0:
+            return {"p50_s": 0.0, "p95_s": 0.0, "max_s": 0.0}
+        return {"p50_s": float(np.percentile(ts, 50)),
+                "p95_s": float(np.percentile(ts, 95)),
+                "max_s": float(ts.max())}
+
     def dispatch_stats(self) -> dict:
         """Host/device interplay on the continuous hot path: how often the
         host synced with the device, how long it sat blocked, and how many
@@ -720,4 +970,9 @@ class ServingEngine:
             "host_syncs_per_100_blocks":
                 100.0 * self.stats["host_syncs"] / steps,
             "host_wait_s": self.stats["sync_wait_s"],
+            "prefill_chunk": self._chunk,
+            "prefill_chunks": self.stats["prefill_chunks"],
+            "prefill_tokens": self.stats["prefill_tokens"],
+            "max_tick_prefill_tokens":
+                self.stats["max_tick_prefill_tokens"],
         }

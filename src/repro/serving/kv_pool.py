@@ -126,6 +126,23 @@ class KVPool:
         self.peak_used = max(self.peak_used, self.used_pages)
         return got
 
+    def ensure(self, owner: int, pages: int) -> Optional[List[int]]:
+        """Incremental provisioning: top `owner` up to `pages` total pages,
+        granting only the missing delta (all-or-nothing).  Returns the NEWLY
+        granted page ids ([] when the owner already holds enough) or None if
+        the pool cannot satisfy the delta — the owner's existing pages are
+        untouched either way.  The one growth primitive shared by decode
+        page growth and chunked-prefill provisioning; growth deliberately
+        ignores the ADMISSION watermark — that headroom exists precisely so
+        live lanes can keep growing while admission holds back."""
+        need = pages - len(self._owned.get(owner, ()))
+        if need <= 0:
+            return []
+        if need > len(self._free):
+            self.failed_allocs += 1
+            return None
+        return self.alloc(need, owner=owner)
+
     def free(self, owner: int) -> int:
         """Return ALL of `owner`'s pages to the free list (retirement or
         preemption).  Returns the number of pages released."""

@@ -1,0 +1,244 @@
+"""Chunked prefill: (1) a cache built chunk-by-chunk (``prefill`` of the
+first chunk + ``prefill_chunk`` for the rest) decodes BIT-IDENTICALLY to
+one-shot prefill — greedy and rejection-sampled, contiguous and paged,
+across chunk sizes {whole-prompt, ragged last chunk, 1 token}; (2) the
+continuous engine with ``prefill_chunk`` set emits exactly the one-shot
+engine's streams for any chunk size, paged or not; (3) mid-prefill
+preemption under a tight page pool stays lossless; (4) per-tick prefill
+work is bounded by the chunk budget; (5) ``done``-masked lanes ride a
+superstep with stateful-mixer state, cache length, and pending frozen —
+the invariant that lets mid-prefill lanes coexist with decode supersteps
+in one batch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.core import lora, online, spec
+from repro.models.model import build_model
+import repro.models.transformer as tfm
+from repro.serving import Request, ServingEngine
+from repro.serving.kv_pool import pages_for
+
+
+@pytest.fixture(scope="module")
+def backbone():
+    cfg = tiny_cfg("vicuna-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dvi = lora.init_draft_params(jax.random.PRNGKey(5), cfg)
+    return cfg, model, params, dvi
+
+
+# ---------------------------------------------------------------------------
+# 1) model-level: chunk-built cache == one-shot cache, by decoded stream
+# ---------------------------------------------------------------------------
+
+def _paged_scaffold(model, cap, page_size=4):
+    """B=1 paged cache with lane 0 mapped over enough pages for `cap`."""
+    mps = pages_for(cap, page_size)
+    cache = model.init_paged_cache(1, mps, page_size, mps)
+    row = np.arange(1, mps + 1, dtype=np.int32)      # page 0 is the null page
+    return tfm.map_slot_pages(cache, jnp.int32(0), jnp.asarray(row))
+
+
+def _build_chunked(model, params, prompt, chunk, paged, cap):
+    """prefill(first chunk) into a scratch + insert_slot (partially-built
+    source), then prefill_chunk for the rest — the engine's exact recipe."""
+    cfg = model.cfg
+    n = prompt.shape[1] - 1
+    c1 = min(chunk, n)
+    live = (_paged_scaffold(model, cap) if paged
+            else model.init_cache(1, cap))
+    _, scratch, _ = model.prefill(params, jnp.asarray(prompt[:, :c1]),
+                                  max_len=c1)
+    cache = tfm.insert_slot(cfg, live, scratch, jnp.int32(0))
+    pos = c1
+    while pos < n:
+        take = min(chunk, n - pos)
+        blk = np.zeros((1, chunk), np.int32)         # ragged chunk: padded,
+        blk[0, :take] = prompt[0, pos:pos + take]    # committed via `take`
+        _, cache = model.prefill_chunk(params, jnp.asarray(blk), cache,
+                                       jnp.array([take], jnp.int32))
+        pos += take
+    return cache
+
+
+@pytest.mark.parametrize("paged", [False, True])
+@pytest.mark.parametrize("chunk", [1, 7, 24])        # 1-token / ragged / 1-chunk
+def test_chunked_cache_streams_bit_identical(backbone, paged, chunk):
+    cfg, model, params, dvi = backbone
+    Tp, max_new = 25, 20
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (1, Tp), 2,
+                                           cfg.vocab_size), np.int32)
+    cap = Tp + max_new + cfg.dvi.k_spec + 2 + tfm.RING_SLACK
+
+    def decode(cache, temp):
+        res = spec.spec_superstep(
+            model, params, dvi, jnp.asarray(prompt[:, -1]), cache, steps=30,
+            budget=jnp.array([max_new], jnp.int32), temperature=temp,
+            key=jax.random.PRNGKey(9), collect=False)
+        return np.asarray(res.gen_buf[0, :int(res.gen_count[0])]).tolist()
+
+    if paged:
+        ref_cache = _paged_scaffold(model, cap)
+        _, scratch, _ = model.prefill(params, jnp.asarray(prompt[:, :-1]),
+                                      max_len=Tp - 1)
+        ref_cache = tfm.insert_slot(cfg, ref_cache, scratch, jnp.int32(0))
+    else:
+        _, ref_cache, _ = model.prefill(params, jnp.asarray(prompt[:, :-1]),
+                                        max_len=cap)
+    chunked_cache = _build_chunked(model, params, prompt, chunk, paged, cap)
+    for temp in (0.0, 0.8):                          # greedy AND sampled
+        assert decode(ref_cache, temp) == decode(chunked_cache, temp), \
+            f"paged={paged} chunk={chunk} temp={temp}"
+
+
+# ---------------------------------------------------------------------------
+# 2) engine-level: --prefill-chunk is invisible in the token streams
+# ---------------------------------------------------------------------------
+
+def _requests(cfg, n, seed=0, long_lens=(20, 33)):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        Tp = int(rng.choice([6] + list(long_lens)))
+        mn = int(rng.choice([6, 10, 16]))
+        p = np.asarray(jax.random.randint(jax.random.PRNGKey(100 + i), (Tp,),
+                                          2, cfg.vocab_size), np.int32)
+        reqs.append(Request(uid=i, prompt=p, max_new=mn))
+    return reqs
+
+
+def _run_engine(model, params, reqs, **kw):
+    state = online.init_trainer(model, jax.random.PRNGKey(3))
+    eng = ServingEngine(model, params, state, scheduler="continuous",
+                        num_slots=3, max_new=16, **kw)
+    for r in reqs:
+        eng.submit(r)
+    outs = eng.run(max_steps=4000)
+    assert len(outs) == len(reqs)
+    assert not eng.busy
+    return {o.uid: o.gen_tokens.tolist() for o in outs}, eng
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_engine_chunked_streams_bit_identical(backbone, paged):
+    cfg, model, params, _ = backbone
+    reqs = _requests(cfg, 6)
+    kw = dict(kv_pages=40, kv_page_size=4, cache_len=64) if paged else {}
+    ref, _ = _run_engine(model, params, reqs, prefill_chunk=0, **kw)
+    for chunk in (1, 6, 64):                         # 1-token/ragged/1-chunk
+        got, eng = _run_engine(model, params, reqs, prefill_chunk=chunk,
+                               sync_every=2, **kw)
+        assert got == ref, f"paged={paged} chunk={chunk}"
+        if chunk < 20:                               # long prompts chunked
+            assert eng.stats["prefill_chunks"] > 0
+        else:                                        # everything fit chunk 1
+            assert eng.stats["prefill_chunks"] == 0
+
+
+# ---------------------------------------------------------------------------
+# 3) mid-prefill preemption under a tight pool is lossless
+# ---------------------------------------------------------------------------
+
+def test_engine_chunked_preemption_lossless(backbone):
+    cfg, model, params, _ = backbone
+    reqs = _requests(cfg, 7, seed=1, long_lens=(24, 33))
+    ref, _ = _run_engine(model, params, reqs, prefill_chunk=0, kv_pages=60,
+                         kv_page_size=4, cache_len=64)
+    got, eng = _run_engine(model, params, reqs, prefill_chunk=5,
+                           sync_every=2, kv_pages=16, kv_page_size=4,
+                           cache_len=64)
+    assert got == ref
+    assert eng.stats["preemptions"] > 0, "tight pool should force preemption"
+    kv = eng.kv_stats()
+    assert kv["used_pages"] == 0, "retirement must free every page"
+
+
+# ---------------------------------------------------------------------------
+# 4) per-tick prefill work is bounded by the chunk budget
+# ---------------------------------------------------------------------------
+
+def test_per_tick_prefill_work_bounded(backbone):
+    cfg, model, params, _ = backbone
+    chunk, slots = 4, 3
+    reqs = _requests(cfg, 6, seed=2, long_lens=(33,))
+    got, eng = _run_engine(model, params, reqs, prefill_chunk=chunk,
+                           sync_every=2)
+    # the chunk budget contract: ONE chunk step per tick, each prefilling
+    # lane advancing at most `chunk` tokens — so no tick ever does more
+    # than num_slots * chunk tokens of prefill work, however long prompts get
+    assert eng.stats["prefill_chunks"] > 0
+    assert 0 < eng.stats["max_tick_prefill_tokens"] <= slots * chunk
+    assert eng.stats["prefill_chunks"] <= len(eng.stats["tick_s"])
+    # decode kept interleaving: supersteps outnumber pure-prefill ticks
+    assert eng.stats["dispatches"] > 0
+    # one-shot engine does no chunk work at all
+    _, eng0 = _run_engine(model, params, reqs, prefill_chunk=0)
+    assert eng0.stats["max_tick_prefill_tokens"] == 0
+    assert eng0.stats["prefill_chunks"] == 0
+
+
+# ---------------------------------------------------------------------------
+# 5) done-masked lanes are FROZEN through a superstep (prefill-lane safety)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["vicuna-7b", "mamba2-370m",
+                                  "recurrentgemma-9b"])
+def test_done_lane_frozen_through_superstep(tiny_models, arch):
+    """A done-masked lane's committed cache length, pending token, and
+    stateful-mixer conv/state must come out of a superstep bit-identical —
+    a mid-prefill lane rides along masked and then RESUMES from them."""
+    cfg, model, params = tiny_models(arch)
+    dvi = lora.init_draft_params(jax.random.PRNGKey(5), cfg)
+    prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (2, 9), 2,
+                                            cfg.vocab_size), np.int32)
+    _, cache, _ = model.prefill(params, jnp.asarray(prompts[:, :-1]),
+                                max_len=48)
+    pending = jnp.asarray(prompts[:, -1])
+    done = jnp.array([True, False])                  # lane 0 rides masked
+    res = spec.spec_superstep(model, params, dvi, pending, cache, steps=3,
+                              done=done, budget=jnp.array([8, 8], jnp.int32),
+                              collect=False)
+    assert int(res.gen_count[0]) == 0
+    assert int(res.pending[0]) == int(pending[0])
+    assert int(res.cache["lengths"][0]) == int(cache["lengths"][0])
+    for name, seg_c in cache["segs"].items():
+        for key in ("conv", "state"):
+            if key not in seg_c:
+                continue
+            np.testing.assert_array_equal(
+                np.asarray(seg_c[key][:, 0]),
+                np.asarray(res.cache["segs"][name][key][:, 0]),
+                err_msg=f"{arch} {name}.{key} drifted on a done lane")
+    # the live lane did decode
+    assert int(res.gen_count[1]) > 0
+
+
+# ---------------------------------------------------------------------------
+# 6) insert_slot accepts a partially-built (smaller-capacity) source
+# ---------------------------------------------------------------------------
+
+def test_insert_slot_partial_source(backbone):
+    cfg, model, params, _ = backbone
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(4), (1, 8), 2,
+                                           cfg.vocab_size), np.int32)
+    live = model.init_cache(3, 40)
+    _, scratch, _ = model.prefill(params, jnp.asarray(prompt), max_len=8)
+    out = tfm.insert_slot(cfg, live, scratch, jnp.int32(1))
+    assert int(out["lengths"][1]) == 8
+    for name, seg_c in out["segs"].items():
+        src_c = scratch["segs"][name]
+        if "k" not in seg_c:
+            continue
+        C_src = src_c["k"].shape[2]
+        np.testing.assert_array_equal(np.asarray(seg_c["k"][:, 1, :C_src]),
+                                      np.asarray(src_c["k"][:, 0]))
+        # beyond the partial source the lane stays inert
+        assert (np.asarray(out["segs"][name]["pos"][1, C_src:]) == -1).all()
+    # untouched lanes stay bit-identical
+    for name, seg_c in out["segs"].items():
+        np.testing.assert_array_equal(np.asarray(seg_c["k"][:, 0]),
+                                      np.asarray(live["segs"][name]["k"][:, 0]))

@@ -4,6 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# interpret-mode Pallas is slow on CPU; CI runs these in their own
+# kernels-interpret job (`-m kernels`) so the tier-1 matrix stays fast
+pytestmark = pytest.mark.kernels
+
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas as decode_attention
 from repro.kernels.lora_logits import lora_logits

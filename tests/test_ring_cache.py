@@ -36,6 +36,7 @@ def _ar_reference(cfg, model, params, prompt, n_new):
     return toks
 
 
+@pytest.mark.slow
 def test_ring_wraparound_matches_full_forward(small_window_model):
     cfg, model, params = small_window_model
     prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 6), 2,

@@ -111,6 +111,7 @@ def _compose_blocks(model, params, dvi, prompts, max_new, temperature=0.0,
     return out, out_len
 
 
+@pytest.mark.slow
 @given(st.integers(0, 2 ** 16), st.sampled_from([0.0, 0.8]))
 @settings(max_examples=6, deadline=None)
 def test_block_step_composition_matches_generate(seed, temperature):

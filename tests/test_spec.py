@@ -40,6 +40,7 @@ def test_lossless_all_archs(tiny_models, name):
     assert ok, f"{name}: diverged for seq {b} within {n} tokens"
 
 
+@pytest.mark.slow
 @given(st.integers(0, 2 ** 16), st.integers(1, 6))
 @settings(max_examples=8, deadline=None)
 def test_lossless_property_random(seed, k_spec):
