@@ -27,9 +27,26 @@ long prompt prefills one chunk per tick between decode supersteps instead
 of stalling admission for its whole prefill — with, again, bit-identical
 token streams (hard-asserted).
 
+``--adaptive-k`` (with ``--k-min``/``--k-max``) switches the fused and
+paged arms onto per-lane acceptance-driven speculation depth
+(repro.core.schedule).  Greedy committed streams are depth-independent,
+so the cross-arm stream assertions keep holding — adaptive K is purely a
+compute/memory knob under this bench's greedy decoding.
+
+``--drift`` runs the drift-trace suite INSTEAD of the scheduler arms: a
+closed-loop batch driver over a qa->math topic shift, for frozen vs
+online drafter x fixed vs adaptive K (sharing one phase-1-warmed
+drafter), reporting acceptance / mean-accepted-tokens / blocks-per-s
+before, at, and after the shift.  Hard-asserted: the online+adaptive arm
+recovers acceptance after the shift, the frozen+adaptive arm sustains
+higher post-shift blocks/s than frozen+fixed (depth throttles to the
+floor once acceptance collapses, so each superstep drafts less), and the
+online+adaptive streams are bit-identical to a sync_every=1 rerun.
+
   PYTHONPATH=src python benchmarks/serving_bench.py            # full
   PYTHONPATH=src python benchmarks/serving_bench.py --smoke    # CI job
   PYTHONPATH=src python benchmarks/serving_bench.py --paged --json out.json
+  PYTHONPATH=src python benchmarks/serving_bench.py --drift --smoke
 
 Output: one CSV-ish line per scheduler:
   scheduler,requests,gen_tokens,tok_per_s,blocks_per_s,p50_ms,p95_ms,acceptance
@@ -49,6 +66,7 @@ import numpy as np
 
 from common import bench_backbone
 from repro.core import online
+from repro.core import schedule as schedule_mod
 from repro.models import transformer as tfm
 from repro.serving import Request, ServingEngine
 from repro.serving.kv_pool import pages_for
@@ -61,7 +79,10 @@ MAX_NEWS = (8, 16, 24)
 MIXED_SHORT, MIXED_LONG = 8, 48
 # bench-trajectory artifact schema; bump when record keys change shape so
 # scripts/check_bench_regression.py can refuse incomparable baselines
-SCHEMA_VERSION = 2
+# (v3: per-arm acceptance_rate + mean_accepted_tokens, adaptive-K block)
+SCHEMA_VERSION = 3
+# drift-trace suite: qa traffic shifts to math at batch DRIFT_SHIFT
+DRIFT_PHASE1, DRIFT_PHASE2 = "qa", "math"
 
 
 def git_sha() -> str:
@@ -165,7 +186,15 @@ def report(name, eng, done, makespan, busy_s, token_budget=0):
            "makespan_s": makespan, "busy_s": busy_s,
            "blocks_per_s": blocks_per_s,
            "lane_blocks_per_s": eng.stats["blocks"] / max(busy_s, 1e-9),
-           "host_wait_frac": eng.stats["sync_wait_s"] / max(busy_s, 1e-9)}
+           "host_wait_frac": eng.stats["sync_wait_s"] / max(busy_s, 1e-9),
+           # speculative-decoding quality: fraction of drafted tokens the
+           # verifier accepted, and committed tokens per verify pass (MAT)
+           "acceptance_rate": eng.acceptance,
+           "mean_accepted_tokens": (eng.stats["committed"]
+                                    / max(eng.stats["blocks"], 1))}
+    if getattr(eng, "adaptive_k", False):
+        rec["adaptive"] = {k: (v.tolist() if hasattr(v, "tolist") else v)
+                           for k, v in eng.adaptive_stats().items()}
     if eng.scheduler == "continuous":
         rec["dispatch"] = eng.dispatch_stats()
         tick = eng.tick_percentiles()
@@ -185,6 +214,177 @@ def streams(done):
     return {c.uid: c.gen_tokens.tolist() for c in done}
 
 
+# ---------------------------------------------------------------------------
+# Drift-trace suite: frozen vs online drafter x fixed vs adaptive K
+# ---------------------------------------------------------------------------
+
+def clone_trainer(ws):
+    """Deep-copy the warm drafter so every arm starts from the same weights
+    (engines mutate dvi_params / opt buffers in place)."""
+    return online.OnlineTrainerState(
+        dvi_params=jax.tree.map(lambda a: a, ws.dvi_params),
+        opt_state=jax.tree.map(lambda a: a, ws.opt_state),
+        buf=jax.tree.map(lambda a: a, ws.buf),
+        baseline=ws.baseline, step=ws.step)
+
+
+def run_drift_arm(model, params, tasks, warm_state, *, learn, adaptive,
+                  n_batches, shift_at, batch, prompt_len, max_new,
+                  sync_every, k_min=1, k_max=0):
+    """Closed-loop batches over a topic shift; per-batch delta metrics.
+
+    Every arm submits the SAME request schedule (uid -> prompt is
+    deterministic), so token streams are comparable across arms."""
+    # the drift suite pins the controller's acceptance band BETWEEN the
+    # healthy phase-1 level (~0.8 here) and the degraded post-shift level
+    # (~0.5-0.6: the un-tuned drafter still shares the verifier's trunk, so
+    # agreement never collapses to zero on synthetic tasks).  The serving
+    # default band [0.35, 0.70] treats 0.55 acceptance as worth drafting
+    # deep for; this bench asks "does depth throttle when acceptance
+    # degrades", so the band must separate the two regimes.
+    kmax = k_max or model.cfg.dvi.k_spec
+    dc = schedule_mod.DepthConfig(k_min=k_min, k_max=kmax, k_init=kmax,
+                                  ema_alpha=0.3, hi=0.80, lo=0.60,
+                                  cooldown=3, ema_init=0.75)
+    eng = ServingEngine(model, params, clone_trainer(warm_state),
+                        scheduler="continuous", num_slots=batch,
+                        batch_size=batch, max_new=max_new,
+                        buckets=(prompt_len,), learn=learn,
+                        updates_per_batch=2, sync_every=sync_every,
+                        adaptive_k=adaptive, k_min=k_min, k_max=k_max,
+                        depth_cfg=dc if adaptive else None)
+    # warm the jit caches at the starting depth so batch-0 timing is honest
+    # (adaptive arms still compile shallower K_blk variants when depth first
+    # drops — that lands in the at-shift window, which is why blocks/s
+    # comparisons read the post-shift window)
+    for j in range(batch):
+        eng.submit(Request(uid=10**7 + j,
+                           prompt=tasks.sample(DRIFT_PHASE1, 1, prompt_len,
+                                               seed=90 + j)[0], max_new=4))
+    eng.run()
+    eng.reset_stats()
+    rows, done, uid = [], [], 0
+    keys = ("accepted", "drafted", "committed", "blocks", "steps")
+    for b in range(n_batches):
+        cat = DRIFT_PHASE1 if b < shift_at else DRIFT_PHASE2
+        for _ in range(batch):
+            eng.submit(Request(uid=uid,
+                               prompt=tasks.sample(cat, 1, prompt_len,
+                                                   seed=uid)[0],
+                               max_new=max_new))
+            uid += 1
+        before = {k: eng.stats[k] for k in keys}
+        t0 = time.perf_counter()
+        while eng.busy:
+            done.extend(eng.step())
+        dt = time.perf_counter() - t0
+        d = {k: eng.stats[k] - before[k] for k in keys}
+        rows.append({"batch": b,
+                     "acceptance": d["accepted"] / max(d["drafted"], 1),
+                     "mat": d["committed"] / max(d["blocks"], 1),
+                     "blocks_per_s": d["steps"] / max(dt, 1e-9),
+                     "mean_depth": d["drafted"] / max(d["blocks"], 1)})
+    return eng, rows, done
+
+
+def wmean(rows, sl, key):
+    vals = [r[key] for r in rows[sl]]
+    return float(np.mean(vals)) if vals else 0.0
+
+
+def run_drift_suite(args, model, params, tasks):
+    n = args.requests or (12 if args.smoke else 24)
+    shift = max(3, n // 3)
+    batch = 4 if args.smoke else 8
+    plen, mnew, S = 12, 16, 2
+    # warm the drafter on phase-1 traffic ONLY, so the shift is a real
+    # distribution change for it
+    warm = online.init_trainer(model, jax.random.PRNGKey(7))
+    warm, _ = online.online_loop(
+        model, params,
+        tasks.stream((DRIFT_PHASE1,), 12 if args.smoke else 30, 8, plen,
+                     seed=1),
+        warm, max_new=mnew, lr=3e-3)
+
+    kw = dict(n_batches=n, shift_at=shift, batch=batch, prompt_len=plen,
+              max_new=mnew, k_min=args.k_min, k_max=args.k_max)
+    arms = {}
+    for label, learn, adaptive in (("frozen-fixed", False, False),
+                                   ("frozen-adaptive", False, True),
+                                   ("online-fixed", True, False),
+                                   ("online-adaptive", True, True)):
+        arms[label] = run_drift_arm(model, params, tasks, warm, learn=learn,
+                                    adaptive=adaptive, sync_every=S, **kw)
+    # losslessness: adaptive + fused vs the same arm one block at a time
+    ref = run_drift_arm(model, params, tasks, warm, learn=True,
+                        adaptive=True, sync_every=1, **kw)
+    match = streams(arms["online-adaptive"][2]) == streams(ref[2])
+
+    pre = slice(max(shift - 3, 0), shift)      # settled phase-1 traffic
+    at = slice(shift, min(shift + 2, n))       # the drop (plus recompiles)
+    post = slice(shift + 2, n)                 # settled post-shift regime
+    late = slice(n - 3, n)                     # recovery endpoint
+    print("arm,window,acceptance,mean_accepted_tokens,blocks_per_s,"
+          "mean_depth")
+    rec = {"shift_at": shift, "n_batches": n, "batch": batch,
+           "sync_every": S, "streams_match": match, "arms": {}}
+    for label, (eng, rows, _) in arms.items():
+        wins = {}
+        for wname, sl in (("pre", pre), ("at_shift", at), ("post", post),
+                          ("late", late)):
+            wins[wname] = {k: wmean(rows, sl, k)
+                           for k in ("acceptance", "mat", "blocks_per_s",
+                                     "mean_depth")}
+            print(f"{label},{wname},{wins[wname]['acceptance']:.3f},"
+                  f"{wins[wname]['mat']:.2f},"
+                  f"{wins[wname]['blocks_per_s']:.1f},"
+                  f"{wins[wname]['mean_depth']:.2f}")
+        rec["arms"][label] = {"windows": wins, "curve": rows}
+        if getattr(eng, "adaptive_k", False):
+            rec["arms"][label]["adaptive"] = {
+                k: (v.tolist() if hasattr(v, "tolist") else v)
+                for k, v in eng.adaptive_stats().items()}
+
+    oa, ff, fa = (rec["arms"][k]["windows"]
+                  for k in ("online-adaptive", "frozen-fixed",
+                            "frozen-adaptive"))
+    print(f"# online-adaptive acceptance: pre={oa['pre']['acceptance']:.3f} "
+          f"at_shift={oa['at_shift']['acceptance']:.3f} "
+          f"late={oa['late']['acceptance']:.3f}")
+    print(f"# frozen post-shift blocks/s: fixed="
+          f"{ff['post']['blocks_per_s']:.1f} adaptive="
+          f"{fa['post']['blocks_per_s']:.1f} depth "
+          f"{ff['post']['mean_depth']:.2f} -> "
+          f"{fa['post']['mean_depth']:.2f}, streams_match={match}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema_version": SCHEMA_VERSION,
+                       "git_sha": git_sha(), "mode": "drift",
+                       "drift": rec, "backbone": model.cfg.name}, f,
+                      indent=2)
+        print(f"# wrote {args.json}")
+
+    # hard gates (CI drift-smoke): the online+adaptive arm must RECOVER
+    # acceptance after the shift, the frozen+adaptive arm must convert the
+    # acceptance collapse into throughput (depth floor -> cheaper blocks),
+    # and fused adaptive streams must equal the per-block schedule's.
+    if not match:
+        raise SystemExit("FATAL: adaptive fused streams diverged from the "
+                         "per-block (sync_every=1) schedule")
+    if not oa["late"]["acceptance"] > oa["at_shift"]["acceptance"]:
+        raise SystemExit(
+            f"FATAL: online+adaptive did not recover acceptance after the "
+            f"shift (at_shift={oa['at_shift']['acceptance']:.3f}, "
+            f"late={oa['late']['acceptance']:.3f})")
+    if not fa["post"]["blocks_per_s"] > ff["post"]["blocks_per_s"]:
+        raise SystemExit(
+            f"FATAL: adaptive K did not raise post-shift blocks/s over "
+            f"fixed K on the frozen drafter "
+            f"(fixed={ff['post']['blocks_per_s']:.1f}, "
+            f"adaptive={fa['post']['blocks_per_s']:.1f})")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -192,6 +392,17 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="add a paged-KV continuous arm (equal token memory, "
                          "2x lanes)")
+    ap.add_argument("--drift", action="store_true",
+                    help="run the drift-trace suite (frozen/online drafter x "
+                         "fixed/adaptive K over a topic shift) instead of "
+                         "the scheduler arms")
+    ap.add_argument("--adaptive-k", action="store_true",
+                    help="run the fused and paged arms with per-lane "
+                         "acceptance-driven speculation depth")
+    ap.add_argument("--k-min", type=int, default=1,
+                    help="adaptive-k depth floor")
+    ap.add_argument("--k-max", type=int, default=0,
+                    help="adaptive-k depth ceiling (0 = cfg k_spec)")
     ap.add_argument("--json", default="",
                     help="write per-arm records to this JSON file")
     ap.add_argument("--requests", type=int, default=0)
@@ -219,6 +430,14 @@ def main():
     S = args.sync_every
     cfg, model, params, tasks = bench_backbone(pretrain_steps=pre,
                                                seed=args.seed)
+    if args.drift:
+        run_drift_suite(args, model, params, tasks)
+        return
+    # per-lane adaptive depth for the fused + paged arms; the per-block and
+    # sync arms stay fixed-K, and the cross-arm stream assertions still hold
+    # because greedy committed streams are depth-independent
+    adapt_kw = ({"adaptive_k": True, "k_min": args.k_min,
+                 "k_max": args.k_max} if args.adaptive_k else {})
     # warm-up requests: continuous admission jit-specializes per prompt
     # length, so cover every length (run_trace warms its own engine)
     warm = [(0.0, Request(uid=10**6 + j,
@@ -237,7 +456,7 @@ def main():
     c1 = run_trace("continuous", model, params, trace, slots, args.batch,
                    warm=warm, engine_kw={"sync_every": 1})
     cS = run_trace("continuous", model, params, trace, slots, args.batch,
-                   warm=warm, engine_kw={"sync_every": S})
+                   warm=warm, engine_kw={"sync_every": S, **adapt_kw})
     recs = [report("sync", *run_trace("sync", model, params, trace, slots,
                                       args.batch, warm=warm), budget),
             report("continuous", *c1, budget),
@@ -304,7 +523,7 @@ def main():
             "continuous", model, params, trace, 2 * slots, args.batch,
             warm=warm, engine_kw={"kv_pages": pages,
                                   "kv_page_size": args.kv_page_size,
-                                  "sync_every": S}),
+                                  "sync_every": S, **adapt_kw}),
             pages * args.kv_page_size))
         p = recs[-1]
         print(f"# paged vs continuous (equal kv memory, 2x lanes): "

@@ -6,7 +6,10 @@ against the committed baseline and FAIL (exit 1) when
   ``--tolerance`` (default 20%) vs ``benchmarks/baseline.json``,
 * the WITHIN-RUN fusion speedup ratio (``fused_speedup_blocks_per_s`` —
   fused vs per-block arm on the same machine in the same run, so immune
-  to runner hardware variance) regressed more than ``--tolerance``, or
+  to runner hardware variance) regressed more than ``--tolerance``,
+* the fused arm's ``mean_accepted_tokens`` (committed tokens per verify
+  pass — the speculative-decoding quality number, hardware-independent)
+  regressed more than ``--tolerance`` vs baseline (schema v3+), or
 * any stream-identity check in the run came back false (``streams_match``
   for the fused arm, and the mixed chunked-prefill arm when present) —
   losslessness is a correctness property, not a perf number.
@@ -43,6 +46,11 @@ import sys
 
 def fused_arm(rec: dict) -> dict:
     """The continuous-fused arm is the serving hot path the gate guards."""
+    if rec.get("mode") == "drift":
+        raise SystemExit(
+            "this is a drift-trace record (serving_bench --drift); the "
+            "drift suite self-asserts its gates — the regression checker "
+            "only takes scheduler-arm records")
     arms = [a for a in rec.get("arms", [])
             if a["scheduler"].startswith("continuous-fused")]
     if not arms:
@@ -61,7 +69,8 @@ def collect_rows(cur: dict, base: dict):
              pct(fc["blocks_per_s"], fb["blocks_per_s"]))]
     for key, label in (("tok_per_s", "fused tok_per_s"),
                        ("p95_ms", "fused p95_ms"),
-                       ("acceptance", "fused acceptance")):
+                       ("acceptance", "fused acceptance"),
+                       ("mean_accepted_tokens", "fused MAT")):
         if key in fc and key in fb:
             rows.append((label, fb[key], fc[key], pct(fc[key], fb[key])))
     sc = cur.get("fused", {}).get("fused_speedup_blocks_per_s")
@@ -128,6 +137,18 @@ def main():
             f"fused blocks_per_s regressed {regress:.1%} "
             f"({fb['blocks_per_s']:.1f} -> {fc['blocks_per_s']:.1f}), "
             f"tolerance {args.tolerance:.0%}")
+
+    # speculative-decoding QUALITY gate: committed tokens per verify pass on
+    # the fused arm.  Hardware-independent (a token count, not a timing), so
+    # it catches drafter/acceptance regressions that blocks_per_s hides —
+    # e.g. a bug that silently rejects good drafts but makes blocks cheaper
+    mc, mb = fc.get("mean_accepted_tokens"), fb.get("mean_accepted_tokens")
+    if mc is not None and mb:
+        mat_regress = (mb - mc) / mb
+        if mat_regress > args.tolerance:
+            failures.append(
+                f"fused mean_accepted_tokens regressed {mat_regress:.1%} "
+                f"({mb:.2f} -> {mc:.2f}), tolerance {args.tolerance:.0%}")
 
     # hardware-independent backstop: the fused-vs-per-block speedup is a
     # ratio of two arms measured in the SAME run on the SAME machine

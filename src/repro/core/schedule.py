@@ -1,13 +1,32 @@
-"""KL->RL annealing schedule (paper §3.4).
+"""Training-aware control schedules.
+
+Two controllers live here:
+
+1. The KL->RL annealing schedule (paper §3.4):
 
     (lambda_pg, lambda_kl)(t) =
         (0, lambda_0)                                   t < T_warmup
         linear ramp to (lambda_pg_max, lambda_kl_min)   T_warmup <= t < T_warmup + T_ramp
         (lambda_pg_max, lambda_kl_min)                  after
 
-beta(t) for the on-policy correction decays from beta0 to beta_min.
+   beta(t) for the on-policy correction decays from beta0 to beta_min.
+
+2. The per-lane **speculation-depth controller** (`DepthConfig` /
+   `depth_update`): the verifier's accept/reject stream steers not just the
+   drafter weights but the speculative machinery itself.  Each lane tracks
+   an EMA of its per-block acceptance fraction ``r = m / k`` and adjusts its
+   depth AIMD-style — additive +1 when the EMA clears ``hi`` (the lane is
+   wasting verifier bandwidth on too-short blocks), multiplicative halving
+   when it drops below ``lo`` (the lane is wasting draft compute on tokens
+   that get rejected).  Every change arms a ``cooldown`` so the EMA can
+   re-settle at the new depth before the next move.  ``depth_update`` is
+   pure jnp and runs INSIDE the fused superstep's while-loop, so adapting
+   depth costs zero extra host syncs; depth therefore only ever changes at
+   speculative-block boundaries (the adaptive-depth contract in ROADMAP).
 """
 from __future__ import annotations
+
+from dataclasses import dataclass
 
 import jax.numpy as jnp
 
@@ -33,3 +52,80 @@ def policy_gate(t, dvi: DVIConfig):
     """On-policy correction is off during warmup, ramps in with lambda_pg."""
     lam_pg, _ = lambda_schedule(t, dvi)
     return lam_pg / max(dvi.lambda_pg_max, 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Per-lane adaptive speculation depth (acceptance-EMA target tracking, AIMD)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DepthConfig:
+    """Knobs for the per-lane depth controller.
+
+    ``k_min >= 1``: a lane at depth 0 would draft nothing, observe no
+    accept/reject signal, and could never recover — the controller refuses
+    degenerate floors.  ``cooldown >= 1`` bounds how fast depth can move:
+    at most one +1 rise per ``cooldown`` blocks, which is what lets the
+    serving engine put a hard upper bound on a lane's depth over a
+    ``sync_every``-block superstep (see ``max_depth_rises``) and provision
+    KV pages for exactly that bound."""
+    k_min: int = 1
+    k_max: int = 4
+    k_init: int = 4              # depth for freshly admitted lanes
+    ema_alpha: float = 0.25      # acceptance-EMA step per block
+    hi: float = 0.70             # EMA >= hi (cooled down): k += 1
+    lo: float = 0.35             # EMA <= lo (cooled down): k = max(k//2, k_min)
+    cooldown: int = 4            # blocks between depth changes per lane
+    ema_init: float = 0.5        # neutral start between lo and hi
+
+    def __post_init__(self):
+        if not 1 <= self.k_min <= self.k_init <= self.k_max:
+            raise ValueError(
+                f"need 1 <= k_min <= k_init <= k_max, got "
+                f"({self.k_min}, {self.k_init}, {self.k_max})")
+        if self.cooldown < 1:
+            raise ValueError("cooldown must be >= 1 (bounds depth slew rate)")
+        if not 0.0 <= self.lo < self.hi <= 1.0:
+            raise ValueError(f"need 0 <= lo < hi <= 1, got ({self.lo}, {self.hi})")
+
+
+def init_depth_state(dc: DepthConfig, n: int):
+    """Fresh controller state for `n` lanes: (k, ema, cool) arrays."""
+    return (jnp.full((n,), dc.k_init, jnp.int32),
+            jnp.full((n,), dc.ema_init, jnp.float32),
+            jnp.zeros((n,), jnp.int32))
+
+
+def depth_update(dc: DepthConfig, k, ema, cool, m, live, k_hi=None):
+    """ONE in-graph controller step at a block boundary.
+
+    k/ema/cool: (B,) per-lane state; m: (B,) accepted drafted tokens this
+    block (the verifier's signal); live: (B,) bool — masked lanes (done,
+    mid-prefill, free slots) keep their state frozen.  `k_hi`: optional
+    per-lane ceiling below ``k_max`` — the serving engine passes the depth
+    it provisioned KV pages for, so an in-graph rise can never outrun the
+    pool (reservation soundness does not depend on the controller).
+    Returns the new (k, ema, cool)."""
+    k_hi = jnp.asarray(dc.k_max if k_hi is None else k_hi, jnp.int32)
+    r = m.astype(jnp.float32) / jnp.maximum(k, 1).astype(jnp.float32)
+    ema2 = jnp.where(live, ema + dc.ema_alpha * (r - ema), ema)
+    cool2 = jnp.where(live, jnp.maximum(cool - 1, 0), cool)
+    ready = live & (cool2 == 0)
+    up = ready & (ema2 >= dc.hi) & (k < k_hi)
+    dn = ready & (ema2 <= dc.lo) & (k > dc.k_min)
+    k2 = jnp.where(up, jnp.minimum(k + 1, k_hi),
+                   jnp.where(dn, jnp.maximum(k // 2, dc.k_min), k))
+    cool2 = jnp.where(up | dn, dc.cooldown, cool2)
+    return k2, ema2, cool2
+
+
+def max_depth_rises(dc: DepthConfig, steps: int, cool0: int) -> int:
+    """Host-side upper bound on the +1 depth rises ``depth_update`` can make
+    over `steps` blocks for a lane entering with cooldown `cool0`.  The
+    engine's page-growth pass uses ``k + max_depth_rises`` as the lane's
+    worst-case depth for the next superstep (and passes the same bound back
+    as ``k_hi``, making the two mutually consistent by construction)."""
+    first = max(int(cool0) - 1, 0)       # cool decrements before the gate
+    if first >= steps:
+        return 0
+    return 1 + (steps - 1 - first) // max(dc.cooldown, 1)

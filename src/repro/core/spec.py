@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import buffer as buffer_mod
+from repro.core import schedule as schedule_mod
 from repro.core.lora import draft_logits
 from repro.models import transformer as tfm
 from repro.models.model import Model
@@ -69,6 +70,10 @@ class SuperstepResult(NamedTuple):
     lane_blocks: jax.Array     # (B,) blocks the lane was live for
     lane_committed: jax.Array  # (B,) cache advance (sum of accepts)
     lane_accepted: jax.Array   # (B,) accepted drafted tokens (sum of m)
+    lane_drafted: jax.Array    # (B,) drafted tokens (sum of live-block depths)
+    k_lane: jax.Array          # (B,) speculation depth after the last block
+    accept_ema: jax.Array      # (B,) depth controller acceptance EMA
+    k_cool: jax.Array          # (B,) depth controller cooldown counter
     cache: dict                # advanced decode cache
     buffer: Optional[dict]     # replay buffer with this superstep's tuples
     key: jax.Array             # threaded PRNG key (sampling path)
@@ -97,14 +102,20 @@ def _restack_cands(cand_stack):
 # (Leviathan'23 speculative *sampling*; the paper evaluates greedy only)
 # ---------------------------------------------------------------------------
 
-def rejection_commit(key, d_blk, dprobs, vprobs):
+def rejection_commit(key, d_blk, dprobs, vprobs, k_lane=None):
     """Speculative-sampling accept/reject (exact target distribution).
 
     d_blk (B, K+1) drafted tokens (position K is the bonus feed, unused for
     acceptance); dprobs/vprobs (B, K+1, V) drafter/verifier distributions.
     Accept drafted token i while u_i < p(d_i)/q(d_i); at the first reject
     emit a sample from norm(max(p - q, 0)); if all K accepted emit a bonus
-    sample from p at position K.  Returns (m, correction (B,))."""
+    sample from p at position K.  Returns (m, correction (B,)).
+
+    k_lane: optional (B,) per-lane speculation depth <= K.  Drafted
+    positions at or beyond a lane's depth are forced-rejected (they were
+    never really proposed), and the bonus branch fires at m == k_lane —
+    exactness is per lane: each lane's stream is distributed as target
+    sampling at ITS depth."""
     B, K1, V = dprobs.shape
     K = K1 - 1
     ku, kr = jax.random.split(key)
@@ -113,6 +124,8 @@ def rejection_commit(key, d_blk, dprobs, vprobs):
     q_at = jnp.take_along_axis(dprobs[:, :K], d_blk[:, :K, None], -1)[..., 0]
     ratio = p_at / jnp.maximum(q_at, 1e-20)
     ok = (u < ratio).astype(jnp.int32)
+    if k_lane is not None:
+        ok = ok * (jnp.arange(K)[None, :] < k_lane[:, None]).astype(jnp.int32)
     m = jnp.sum(jnp.cumprod(ok, axis=1), axis=1)                  # (B,)
 
     # correction distribution at position m: residual (reject) or p (bonus)
@@ -121,7 +134,8 @@ def rejection_commit(key, d_blk, dprobs, vprobs):
     resid = jnp.maximum(pm - qm, 0.0)
     rsum = resid.sum(-1, keepdims=True)
     resid = jnp.where(rsum > 1e-20, resid / jnp.maximum(rsum, 1e-20), pm)
-    dist = jnp.where((m == K)[:, None], pm, resid)
+    k_eff = K if k_lane is None else k_lane
+    dist = jnp.where((m == k_eff)[:, None], pm, resid)
     correction = jax.random.categorical(kr, jnp.log(jnp.maximum(dist, 1e-30)))
     return m, correction.astype(jnp.int32)
 
@@ -131,7 +145,8 @@ def spec_block_step(model: Model, params: dict, dvi_params: dict,
                     k_spec: Optional[int] = None,
                     done: Optional[jax.Array] = None,
                     temperature: float = 0.0,
-                    key: Optional[jax.Array] = None) -> BlockStep:
+                    key: Optional[jax.Array] = None,
+                    k_lane: Optional[jax.Array] = None) -> BlockStep:
     """ONE speculative block-step against a live cache — the single owner of
     the draft -> verify -> commit logic.  Both ``speculative_generate`` (which
     loops it under ``jax.lax.while_loop``) and the continuous-batching serving
@@ -141,6 +156,17 @@ def spec_block_step(model: Model, params: dict, dvi_params: dict,
     lanes marked done are masked out entirely (accept = 0, cache length and
     stateful-mixer states unchanged, pending passed through), which is how
     idle serving slots ride along in a fixed-size decode batch for free.
+
+    k_lane: optional (B,) int32 per-lane speculation depth in [0, K].  The
+    draft still runs K+1 feeds (static shapes, PRNG key schedule unchanged),
+    but acceptance is masked so each lane commits at most ``k_lane + 1``
+    tokens: positions at or beyond a lane's depth can never match (greedy)
+    or be accepted (rejection sampling), and the correction/bonus token is
+    drawn at position min(m, k_lane).  Rollback needs no new machinery — a
+    short lane's extra eager writes are the same class of garbage as
+    rejected full-depth drafts and roll back by length truncation.  With
+    ``k_lane=None`` (or all lanes at K) the math is bit-identical to the
+    fixed-depth path.
 
     temperature == 0: greedy drafting + longest-agreeing-prefix verification.
     temperature > 0: the drafter samples and the verifier runs Leviathan-style
@@ -191,9 +217,12 @@ def spec_block_step(model: Model, params: dict, dvi_params: dict,
         key, sub = jax.random.split(key)
         vprobs = jax.nn.softmax(vlogits / temperature, axis=-1)
         dprobs = jnp.moveaxis(dp_s, 0, 1)               # (B, K+1, V)
-        m, correction = rejection_commit(sub, d_blk, dprobs, vprobs)
+        m, correction = rejection_commit(sub, d_blk, dprobs, vprobs,
+                                         k_lane=k_lane)
     else:
         matches = (d_blk[:, :K] == y_star[:, :K])
+        if k_lane is not None:
+            matches = matches & (jnp.arange(K)[None, :] < k_lane[:, None])
         m = jnp.sum(jnp.cumprod(matches.astype(jnp.int32), axis=1), axis=1)
         correction = None
     accept = jnp.where(done, 0, m + 1)                  # (B,)
@@ -212,18 +241,22 @@ def spec_block_step(model: Model, params: dict, dvi_params: dict,
 
 
 def log_block_tuples(cfg, buf: dict, step: BlockStep, prev_pending: jax.Array,
-                     done: jax.Array, k_spec: Optional[int] = None) -> dict:
+                     done: jax.Array, k_spec: Optional[int] = None,
+                     k_lane: Optional[jax.Array] = None) -> dict:
     """Append one block's accept/reject tuples to the replay buffer: drafted
     positions 1..K up to and including the first reject; lanes marked `done`
-    (finished sequences, idle serving slots, padded lanes) are excluded."""
+    (finished sequences, idle serving slots, padded lanes) are excluded.
+    With per-lane depths (`k_lane`), positions beyond a lane's depth were
+    never proposed and are excluded too — a depth-k lane logs at most k
+    tuples, so a throttled lane also stops flooding the replay buffer."""
     K = cfg.dvi.k_spec if k_spec is None else k_spec
     if K == 0:
         return buf
     B = step.d_blk.shape[0]
     d = cfg.d_model
     i_idx = jnp.arange(1, K + 1)                        # (K,)
-    valid = (~done)[:, None] & (i_idx[None, :]
-                                <= jnp.minimum(step.m + 1, K)[:, None])
+    lim = jnp.minimum(step.m + 1, K if k_lane is None else k_lane)
+    valid = (~done)[:, None] & (i_idx[None, :] <= lim[:, None])
     reward = (i_idx[None, :] <= step.m[:, None]).astype(jnp.float32)
     prev = jnp.concatenate([prev_pending[:, None], step.d_blk[:, :K - 1]],
                            axis=1) if K > 1 else prev_pending[:, None]
@@ -247,7 +280,12 @@ def spec_superstep(model: Model, params: dict, dvi_params: dict,
                    collect: bool = False,
                    k_spec: Optional[int] = None,
                    temperature: float = 0.0,
-                   key: Optional[jax.Array] = None) -> SuperstepResult:
+                   key: Optional[jax.Array] = None,
+                   k_lane: Optional[jax.Array] = None,
+                   depth_cfg=None,
+                   accept_ema: Optional[jax.Array] = None,
+                   k_cool: Optional[jax.Array] = None,
+                   k_cap: Optional[jax.Array] = None) -> SuperstepResult:
     """Fused multi-block tick: run up to ``steps`` speculative blocks inside
     one ``jax.lax.while_loop`` so the serving engine syncs with the device
     once per superstep instead of once per block.
@@ -266,7 +304,20 @@ def spec_superstep(model: Model, params: dict, dvi_params: dict,
     stream across supersteps is bit-identical to per-block ticking — the
     only behavioural difference is that retirement/admission happen at
     superstep boundaries (a finished lane rides along masked until the
-    host next harvests)."""
+    host next harvests).
+
+    Adaptive depth: ``k_lane`` (B,) gives each lane its own speculation
+    depth <= K; with ``depth_cfg`` (a ``schedule.DepthConfig``) the depth
+    controller also runs IN-GRAPH after every block — the acceptance EMA
+    (``accept_ema``) and cooldown (``k_cool``) ride the while-loop carry
+    and the updated (k, ema, cool) come back in the result, so adapting
+    depth per block costs zero extra host syncs.  ``k_cap`` (B,) is a hard
+    per-lane ceiling the controller cannot raise k beyond — the serving
+    engine passes the depth it provisioned KV pages for, decoupling pool
+    soundness from controller behaviour.  Depth changes take effect at the
+    NEXT block (boundaries only — the adaptive-depth contract).  All of
+    this is inert by default: with ``k_lane=None`` and ``depth_cfg=None``
+    the block math is bit-identical to the fixed-depth path."""
     cfg = model.cfg
     K = cfg.dvi.k_spec if k_spec is None else k_spec
     B = pending.shape[0]
@@ -276,6 +327,14 @@ def spec_superstep(model: Model, params: dict, dvi_params: dict,
               if budget is None else budget.astype(jnp.int32))
     if collect and buf is None:
         buf = buffer_mod.init_buffer(cfg)
+    ragged = k_lane is not None
+    k0 = (jnp.full((B,), K, jnp.int32) if k_lane is None
+          else k_lane.astype(jnp.int32))
+    ema0 = (jnp.zeros((B,), jnp.float32) if accept_ema is None
+            else accept_ema.astype(jnp.float32))
+    cool0 = (jnp.zeros((B,), jnp.int32) if k_cool is None
+             else k_cool.astype(jnp.int32))
+    khi = None if k_cap is None else jnp.minimum(k_cap.astype(jnp.int32), K)
     cap = steps * (K + 1)
     ar = jnp.arange(K + 1)
     lane = jnp.arange(B)
@@ -283,11 +342,11 @@ def spec_superstep(model: Model, params: dict, dvi_params: dict,
 
     def body(carry):
         (i, pending, done, gen_buf, gen_count, blocks, committed, accepted,
-         cache, buf, key) = carry
+         drafted, k, ema, cool, cache, buf, key) = carry
         live = (~done).astype(jnp.int32)
         blk = spec_block_step(model, params, dvi_params, pending, cache,
                               k_spec=K, done=done, temperature=temperature,
-                              key=key)
+                              key=key, k_lane=k if ragged else None)
         # sequential commit semantics, vectorized: candidate positions are
         # the accepted prefix that still fits the lane budget; an EOS among
         # them is written and stops everything after it
@@ -305,20 +364,31 @@ def spec_superstep(model: Model, params: dict, dvi_params: dict,
         new_count = gen_count + written.sum(axis=1, dtype=jnp.int32)
         new_done = done | jnp.any(hit_eos, axis=1) | (new_count >= budget)
         if collect:
-            buf = log_block_tuples(cfg, buf, blk, pending, done, k_spec=K)
+            buf = log_block_tuples(cfg, buf, blk, pending, done, k_spec=K,
+                                   k_lane=k if ragged else None)
+        drafted = drafted + k * live     # depth the block actually ran at
+        if depth_cfg is not None:
+            # controller sees THIS block's outcome (depth k, accepted m) and
+            # adjusts for the next block; masked lanes keep frozen state
+            k, ema, cool = schedule_mod.depth_update(
+                depth_cfg, k, ema, cool, blk.m, ~done, k_hi=khi)
         return (i + 1, blk.pending, new_done, gen_buf, new_count,
                 blocks + live, committed + blk.accept,
-                accepted + blk.m * live, blk.cache, buf, blk.key)
+                accepted + blk.m * live, drafted,
+                k, ema, cool, blk.cache, buf, blk.key)
 
     def cond(carry):
         return (carry[0] < steps) & ~jnp.all(carry[2])
 
     carry = (jnp.int32(0), pending, done, jnp.zeros((B, cap), jnp.int32),
-             zeros, zeros, zeros, zeros, cache, buf, key)
+             zeros, zeros, zeros, zeros, zeros, k0, ema0, cool0,
+             cache, buf, key)
     (_, pending, done, gen_buf, gen_count, blocks, committed, accepted,
-     cache, buf, key) = jax.lax.while_loop(cond, body, carry)
+     drafted, k_out, ema_out, cool_out, cache, buf, key) = \
+        jax.lax.while_loop(cond, body, carry)
     return SuperstepResult(pending, done, gen_buf, gen_count, blocks,
-                           committed, accepted, cache, buf, key)
+                           committed, accepted, drafted, k_out, ema_out,
+                           cool_out, cache, buf, key)
 
 
 def speculative_generate(model: Model, params: dict, dvi_params: dict,

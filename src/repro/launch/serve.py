@@ -17,6 +17,12 @@ scheduler onto the paged KV pool: admission is gated on free pages instead
 of worst-case slot reservations, and the engine preempts-or-queues when
 the pool runs dry (see repro.serving.kv_pool).
 
+``--adaptive-k`` turns speculation depth into a per-lane runtime quantity
+steered by each lane's acceptance EMA (see repro.core.schedule): greedy
+token streams are unchanged, but lanes with poor acceptance throttle their
+draft depth (and the whole batch drafts shallower once every lane has),
+recovering draft compute and KV-pool headroom under drift.
+
   PYTHONPATH=src python -m repro.launch.serve --arch vicuna-7b --tiny \\
       --requests 64 --shift-at 32 --scheduler continuous --num-slots 8
 """
@@ -59,6 +65,15 @@ def main():
                          "interleaved with decode supersteps (bounds "
                          "block-step jitter under long prompts; streams "
                          "stay bit-identical to one-shot prefill)")
+    ap.add_argument("--adaptive-k", action="store_true",
+                    help="per-lane acceptance-driven speculation depth: "
+                         "each lane's K adapts in [k-min, k-max] from its "
+                         "accept/reject EMA (greedy streams are unchanged; "
+                         "draft compute shrinks where acceptance is low)")
+    ap.add_argument("--k-min", type=int, default=1,
+                    help="adaptive-k depth floor")
+    ap.add_argument("--k-max", type=int, default=0,
+                    help="adaptive-k depth ceiling (0 = cfg k_spec)")
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--shift-at", type=int, default=0,
@@ -82,7 +97,9 @@ def main():
                         buckets=(args.prompt_len,), kv_pages=args.kv_pages,
                         kv_page_size=args.kv_page_size,
                         sync_every=args.sync_every,
-                        prefill_chunk=args.prefill_chunk)
+                        prefill_chunk=args.prefill_chunk,
+                        adaptive_k=args.adaptive_k, k_min=args.k_min,
+                        k_max=args.k_max)
     t0 = time.time()
     done = []
     for i in range(args.requests):
@@ -120,6 +137,13 @@ def main():
         print(f"[serve] paged KV: peak_util={kv['peak_utilization']:.2f} "
               f"preemptions={kv['preemptions']} "
               f"peak_live={kv['peak_live_slots']}")
+    if args.adaptive_k:
+        ak = eng.adaptive_stats()
+        print(f"[serve] adaptive K in [{ak['k_min']},{ak['k_max']}]: "
+              f"mean_depth={ak['mean_depth']:.2f} "
+              f"recent={ak['k_mean_recent']:.2f} "
+              f"draft_efficiency={ak['draft_efficiency']:.2f} "
+              f"k_lane={ak['k_lane'].tolist()}")
 
 
 if __name__ == "__main__":

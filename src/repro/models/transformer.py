@@ -274,7 +274,11 @@ def spread_write(cache, blk, lengths, wrap: bool = True):
     slot index == absolute position): out-of-capacity writes are DROPPED —
     a position past C can only ever be an eager speculative / chunk-padding
     write that rollback would discard anyway, and wrapping it would clobber
-    committed slots near 0."""
+    committed slots near 0.  Both clauses are depth-agnostic: with per-lane
+    adaptive K a short lane's surplus draft writes (depth < batch width T)
+    clip/wrap exactly like rejected full-depth drafts, and capacity is
+    reserved for the worst-case k_max (engine ``_cap``), so committed slots
+    are never displaced."""
     B, C = cache.shape[:2]
     T = blk.shape[1]
     rel = jnp.arange(C)[None, :] - lengths[:, None]           # (B,C)
@@ -854,7 +858,17 @@ def reset_slot(cfg: ModelConfig, cache: dict, slot) -> dict:
 def commit_cache(cfg: ModelConfig, cache: dict, cands: dict,
                  accept: jax.Array) -> dict:
     """Advance the cache by `accept` (B,) committed tokens; select stateful
-    candidate states at index accept-1 (no-op rows where accept == 0)."""
+    candidate states at index accept-1 (no-op rows where accept == 0).
+
+    Ragged-depth audit (adaptive per-lane K): everything here is already
+    per-lane — `accept` may be any value in [0, T] independently per batch
+    row, the gather at accept-1 never reads past the candidate block, and
+    rollback of the unaccepted tail is pure length truncation (the eager
+    writes beyond ``lengths + accept`` are excluded from attention by the
+    ``pos <= qpos`` mask and overwritten by the next block).  A lane whose
+    depth k is below the batch draft width K commits at most k+1 tokens and
+    its extra K-k eager writes are exactly the rejected-draft garbage this
+    rollback rule already handles — no adaptive-depth special case."""
     new_segs = dict(cache["segs"])
     for seg in model_segments(cfg):
         cand = cands.get(seg.name)

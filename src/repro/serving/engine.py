@@ -87,6 +87,38 @@ stall every live lane for its whole prefill:
   and sampled, both layouts — tested): the chunk step is the same decode
   math at the same positions, only scheduled differently.
 
+With ``adaptive_k=True`` speculation depth becomes a per-lane runtime
+quantity driven by the verifier's accept/reject stream (the paper's
+training-aware thesis applied to the speculative machinery itself, not
+just the drafter weights):
+
+* each lane carries depth-controller state (depth ``k``, acceptance EMA,
+  cooldown — see ``repro.core.schedule.DepthConfig``); the controller runs
+  IN-GRAPH inside the fused superstep, so depth adapts per block with zero
+  extra host syncs and changes apply only at block boundaries,
+* the host mirrors the controller state per slot (harvested with the
+  superstep summary, reset to ``k_init`` on admission, so a recycled lane
+  never inherits the previous request's depth),
+* every dispatch drafts ``K_blk = max`` over the live lanes' depth
+  ceilings — when the whole batch throttles down (e.g. post-drift while
+  the drafter relearns), the superstep re-specializes to a SHALLOWER draft
+  scan and each block gets genuinely cheaper (this is where adaptive depth
+  buys wall-clock, not just accounting; at most ``k_max`` distinct
+  compilations),
+* paged-pool math splits by purpose (the adaptive-depth contract, see
+  ROADMAP): reservation-class computations (admission gating, pre-admission
+  reserves, prompt trimming, cache capacity) use the worst-case ``k_max``;
+  growth-class computations provision each lane for its LIVE depth plus the
+  bounded number of rises the controller could make within one superstep
+  (``schedule.max_depth_rises``), and that same bound is passed back into
+  the graph as a hard ceiling ``k_cap`` — an in-graph rise can never outrun
+  the pages provisioned for it, so low-acceptance lanes stop hoarding pool
+  headroom without risking committed KV,
+* greedy committed streams are depth-independent (speculative decoding is
+  lossless for ANY k), so turning the controller on changes throughput and
+  compute, never tokens; with ``adaptive_k=False`` the engine takes the
+  fixed-depth code path untouched.
+
 ``scheduler="sync"`` keeps the legacy batch-synchronous path (bucket by
 prompt length, decode a whole batch to completion with
 ``speculative_generate``) for comparison — ``benchmarks/serving_bench.py``
@@ -104,6 +136,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import online as online_mod
+from repro.core import schedule as schedule_mod
 from repro.core import spec as spec_mod
 from repro.models import transformer as tfm
 from repro.models.model import Model
@@ -165,6 +198,10 @@ class ServingEngine:
     kv_page_size: int = 16        # tokens per page (paged mode)
     kv_watermark: int = 0         # pages kept free at admission (paged mode)
     prefill_chunk: int = 0        # >0: prefill in chunks of this many tokens
+    adaptive_k: bool = False      # per-lane acceptance-driven depth control
+    k_min: int = 1                # adaptive: depth floor
+    k_max: int = 0                # adaptive: depth ceiling (0 = cfg.dvi.k_spec)
+    depth_cfg: Optional[schedule_mod.DepthConfig] = None  # full override
     _queue: Dict[int, List[Request]] = field(default_factory=dict)
     _fifo: deque = field(default_factory=deque)
     stats: dict = field(default_factory=lambda: {
@@ -172,7 +209,8 @@ class ServingEngine:
         "accepted": 0, "drafted": 0, "updates": 0, "preemptions": 0,
         "peak_live_slots": 0, "host_syncs": 0, "sync_wait_s": 0.0,
         "dispatches": 0, "prefill_chunks": 0, "prefill_tokens": 0,
-        "max_tick_prefill_tokens": 0, "latencies": [], "tick_s": []})
+        "max_tick_prefill_tokens": 0, "latencies": [], "tick_s": [],
+        "k_mean": []})
 
     def __post_init__(self):
         model, cfg = self.model, self.model.cfg
@@ -184,8 +222,24 @@ class ServingEngine:
         # (rolled back by length masking, like rejected speculative tokens) —
         # so the chunk is clamped to the slack the rollback rule guarantees
         self._chunk = min(max(0, int(self.prefill_chunk)), tfm.RING_SLACK)
+        # adaptive depth: controller config, plus the WORST-CASE depth that
+        # every reservation-class computation (cache capacity, prompt
+        # trimming, admission gating, pre-admission reserves) must assume —
+        # the adaptive-depth contract.  Growth-class computations use the
+        # live per-lane depth instead (see _lane_growth_k).
+        if self.adaptive_k and self.scheduler != "continuous":
+            raise ValueError("adaptive_k requires scheduler='continuous'")
+        if self.adaptive_k:
+            kmax = self.k_max or K
+            self._depth = self.depth_cfg or schedule_mod.DepthConfig(
+                k_min=self.k_min, k_max=kmax,
+                k_init=min(max(K, self.k_min), kmax))
+            self._k_worst = self._depth.k_max
+        else:
+            self._depth = None
+            self._k_worst = K
         self._cap = self.cache_len or (max(self.buckets) + self.max_new
-                                       + K + 2 + tfm.RING_SLACK)
+                                       + self._k_worst + 2 + tfm.RING_SLACK)
         self._update_fn = online_mod.make_update_fn(self.model, self.mode,
                                                     self.lr)
         self._key = jax.random.PRNGKey(1234)
@@ -197,11 +251,24 @@ class ServingEngine:
         self._cache: Optional[dict] = None
         self._slot_accepted = np.zeros((self.num_slots,), np.int64)
         self._slot_drafted = np.zeros((self.num_slots,), np.int64)
+        self._slot_committed = np.zeros((self.num_slots,), np.int64)
+        self._slot_blocks = np.zeros((self.num_slots,), np.int64)
+        # host mirror of the per-lane depth-controller state: uploaded at
+        # dispatch, harvested with the superstep summary, reset to k_init on
+        # admission (so a recycled lane starts fresh).  Kept even when the
+        # controller is off (then it just pins k == k_spec in the stats).
+        ki = self._depth.k_init if self._depth is not None else K
+        ei = self._depth.ema_init if self._depth is not None else 0.0
+        self._k_host = np.full((self.num_slots,), ki, np.int32)
+        self._ema_host = np.full((self.num_slots,), ei, np.float32)
+        self._cool_host = np.zeros((self.num_slots,), np.int32)
         self._submit_t: Dict[int, float] = {}
         self._blocks_since_update = 0
         self.stats["latencies"] = deque(self.stats["latencies"],
                                         maxlen=self.latency_window)
         self.stats["tick_s"] = deque(self.stats["tick_s"],
+                                     maxlen=self.latency_window)
+        self.stats["k_mean"] = deque(self.stats["k_mean"],
                                      maxlen=self.latency_window)
 
         # ONE jitted generation entry point (jit shape-specializes on
@@ -224,6 +291,24 @@ class ServingEngine:
                 model, params, dvi_params, pending, cache, steps=S,
                 done=done, budget=budget, eos_id=eos, buf=buf, collect=True)
         self._superstep_fn = jax.jit(superstep)
+
+        # adaptive-depth superstep: same fused loop, plus the in-graph depth
+        # controller.  K_blk — the draft-scan width this dispatch — is a
+        # STATIC arg: when every live lane has throttled down, the superstep
+        # re-specializes to a shallower (cheaper) draft scan.  At most k_max
+        # distinct compilations, cached by jit like chunk shapes.
+        depth = self._depth
+
+        def superstep_adaptive(params, dvi_params, pending, cache, buf, done,
+                               budget, k, ema, cool, kcap, K_blk):
+            return spec_mod.spec_superstep(
+                model, params, dvi_params, pending, cache, steps=S,
+                done=done, budget=budget, eos_id=eos, buf=buf, collect=True,
+                k_spec=K_blk, k_lane=k, depth_cfg=depth, accept_ema=ema,
+                k_cool=cool, k_cap=kcap)
+        self._superstep_adaptive_fn = (
+            jax.jit(superstep_adaptive, static_argnums=(11,))
+            if depth is not None else None)
         # (SuperstepResult futures, engine-clock mark, occupied lanes)
         self._inflight: Optional[tuple] = None
         # drafter update dispatched but not yet folded into self.state
@@ -416,7 +501,8 @@ class ServingEngine:
         # step's eager writes past a full-length idle lane's committed
         # prefix need no extra margin here: full caches CLIP out-of-capacity
         # writes (spread_write wrap=False) instead of ring-wrapping them.
-        limit = self._cap - remaining_new - cfg.dvi.k_spec - 2
+        # Worst-case depth, not live depth: capacity is reservation-class.
+        limit = self._cap - remaining_new - self._k_worst - 2
         if len(prompt) > limit:
             prompt = prompt[-limit:]
         return prompt
@@ -441,22 +527,41 @@ class ServingEngine:
             extent += self._superstep_horizon(st.max_new - len(st.gen)) + 1
         return take, finishing, extent
 
-    def _superstep_horizon(self, remaining: int) -> int:
+    def _superstep_horizon(self, remaining: int, k: Optional[int] = None) -> int:
         """Cache slots one superstep can touch beyond a lane's committed
         length: ``sync_every`` blocks of K+1 eager tokens, capped by the
         lane's remaining generation budget (a lane that can only run r more
         blocks before retiring advances the cache at most r + K slots).
         The ONE formula shared by admission sizing and page growth — they
         must stay in lockstep, since lanes admitted after the tick's growth
-        pass run their first superstep on admission's provisioning alone."""
-        K = self.model.cfg.dvi.k_spec
+        pass run their first superstep on admission's provisioning alone.
+
+        `k`: the depth to assume.  Defaults to the worst case (``k_max``
+        when adaptive, else ``k_spec``) — what every reservation-class
+        caller must use; growth passes the lane's live depth bound
+        (``_lane_growth_k``) instead, per the adaptive-depth contract."""
+        K = self._k_worst if k is None else k
         return min(self.sync_every * (K + 1), remaining + K)
 
-    def _pages_needed(self, cache_len: int, remaining: int) -> int:
+    def _pages_needed(self, cache_len: int, remaining: int,
+                      k: Optional[int] = None) -> int:
         """Pages covering `cache_len` committed slots plus one superstep
         horizon (+1 slack slot, the pre-superstep rule since PR 3)."""
         return self._pool.pages_for(
-            cache_len + self._superstep_horizon(remaining) + 1)
+            cache_len + self._superstep_horizon(remaining, k) + 1)
+
+    def _lane_growth_k(self, s: int) -> int:
+        """The depth bound lane `s` is provisioned for over its NEXT
+        superstep: its live depth plus the (cooldown-limited) rises the
+        in-graph controller could make within ``sync_every`` blocks.  This
+        same bound is passed back into the superstep as ``k_cap``, so the
+        provisioning and the controller's reachable depths are mutually
+        consistent by construction — pages can never be outrun."""
+        if self._depth is None:
+            return self.model.cfg.dvi.k_spec
+        rises = schedule_mod.max_depth_rises(
+            self._depth, self.sync_every, int(self._cool_host[s]))
+        return min(self._depth.k_max, int(self._k_host[s]) + rises)
 
     def _growth_reserve(self) -> int:
         """Upper bound on the pages live lanes may still need for their
@@ -559,6 +664,14 @@ class ServingEngine:
                                       admit_seq=seq0,
                                       pf_prompt=prompt if chunked else None,
                                       pf_pos=c1 if chunked else None)
+            # fresh depth-controller state for the recycled lane: a request
+            # must not inherit the previous occupant's throttled depth (or a
+            # preempted replay its own pre-preemption EMA — prefix replay
+            # changes positions, so stale state is not evidence)
+            if self._depth is not None:
+                self._k_host[slot] = self._depth.k_init
+                self._ema_host[slot] = self._depth.ema_init
+                self._cool_host[slot] = 0
             # a mid-prefill lane stays done-masked: it rides supersteps
             # inert until its finishing chunk flips it live
             self._done[slot] = chunked
@@ -595,7 +708,11 @@ class ServingEngine:
         horizon is ``sync_every * (K+1)`` slots — capped by the lane's
         remaining ``max_new`` budget (a lane that can only run r more blocks
         before retiring advances the cache at most r+K slots; growing it
-        further would waste pool headroom under pressure).  On pool
+        further would waste pool headroom under pressure).  Adaptive depth
+        makes K per-lane: growth sizes each lane for its LIVE depth bound
+        (``_lane_growth_k``) instead of the global worst case, so throttled
+        low-acceptance lanes release pool headroom to lanes that can
+        actually use it.  On pool
         exhaustion, preempt the NEWEST other lane and retry — oldest
         requests keep their pages (no livelock: admission guarantees any
         single request fits the pool).  All row updates of the tick are
@@ -612,7 +729,8 @@ class ServingEngine:
                 continue
             while True:
                 got = self._pool.ensure(
-                    st.uid, self._pages_needed(st.cache_len, remaining))
+                    st.uid, self._pages_needed(st.cache_len, remaining,
+                                               k=self._lane_growth_k(s)))
                 if got is None:
                     victims = [i for i, v in enumerate(self._slots)
                                if v is not None and i != s]
@@ -737,9 +855,30 @@ class ServingEngine:
         for s, st in enumerate(self._slots):
             if st is not None:
                 budget[s] = st.max_new - len(st.gen)
-        res = self._superstep_fn(self.params, self.state.dvi_params,
-                                 self._pending, self._cache, self.state.buf,
-                                 jnp.asarray(self._done), jnp.asarray(budget))
+        if self._depth is not None:
+            # per-lane depth ceiling = what growth provisioned pages for;
+            # the draft-scan width K_blk is the max ceiling over lanes that
+            # can decode this superstep (mid-prefill lanes cannot flip live
+            # mid-superstep — _advance_prefill already ran — and free lanes
+            # are admitted only at boundaries, so the max over decode lanes
+            # is exact, not heuristic)
+            kcap = np.full((self.num_slots,), self._k_worst, np.int32)
+            kblk = self._depth.k_min
+            for s, st in enumerate(self._slots):
+                if st is not None and st.pf_pos is None:
+                    kcap[s] = self._lane_growth_k(s)
+                    kblk = max(kblk, int(kcap[s]))
+            res = self._superstep_adaptive_fn(
+                self.params, self.state.dvi_params, self._pending,
+                self._cache, self.state.buf, jnp.asarray(self._done),
+                jnp.asarray(budget), jnp.asarray(self._k_host),
+                jnp.asarray(self._ema_host), jnp.asarray(self._cool_host),
+                jnp.asarray(kcap), kblk)
+        else:
+            res = self._superstep_fn(self.params, self.state.dvi_params,
+                                     self._pending, self._cache,
+                                     self.state.buf, jnp.asarray(self._done),
+                                     jnp.asarray(budget))
         # engine state advances to the (not yet materialized) outputs; every
         # follow-up device op (admission, reset, next superstep) chains on
         # them without a host round-trip
@@ -768,12 +907,12 @@ class ServingEngine:
             return []
         res, clock_mark, lanes = self._inflight
         self._inflight = None
-        K = self.model.cfg.dvi.k_spec
         t0 = time.perf_counter()
-        (done_np, cnt_np, gen_np, blocks_np, committed_np,
-         accepted_np, buf_count) = jax.device_get(
+        (done_np, cnt_np, gen_np, blocks_np, committed_np, accepted_np,
+         drafted_np, k_np, ema_np, cool_np, buf_count) = jax.device_get(
             (res.done, res.gen_count, res.gen_buf, res.lane_blocks,
-             res.lane_committed, res.lane_accepted, res.buffer["count"]))
+             res.lane_committed, res.lane_accepted, res.lane_drafted,
+             res.k_lane, res.accept_ema, res.k_cool, res.buffer["count"]))
         now = time.perf_counter()
         self.stats["host_syncs"] += 1
         self.stats["sync_wait_s"] += now - t0
@@ -786,6 +925,7 @@ class ServingEngine:
         wall_share = wall / max(total_blocks, 1)
 
         outs: List[Completion] = []
+        k_seen: List[int] = []
         for s in lanes:                  # only lanes occupied at dispatch:
             st = self._slots[s]          # slots admitted since then (into
             if st is None:               # previously-free lanes) rode along
@@ -800,9 +940,22 @@ class ServingEngine:
             self.stats["blocks"] += nb
             self.stats["committed"] += int(committed_np[s])
             self.stats["accepted"] += int(accepted_np[s])
-            self.stats["drafted"] += K * nb
+            # EXACT draft accounting, counted in-graph: sum of the depth
+            # each LIVE block actually ran at (a lane that went done early
+            # rides the rest of the superstep without inflating its drafts;
+            # an adaptive lane counts its per-block k, not the global K)
+            self.stats["drafted"] += int(drafted_np[s])
             self._slot_accepted[s] += int(accepted_np[s])
-            self._slot_drafted[s] += K * nb
+            self._slot_drafted[s] += int(drafted_np[s])
+            self._slot_committed[s] += int(committed_np[s])
+            self._slot_blocks[s] += nb
+            k_seen.append(int(k_np[s]))
+            # fold the lane's post-superstep controller state into the host
+            # mirror (masked lanes came back unchanged, so this is exact)
+            if self._depth is not None:
+                self._k_host[s] = k_np[s]
+                self._ema_host[s] = ema_np[s]
+                self._cool_host[s] = cool_np[s]
             if done_np[s]:               # EOS or budget, detected in-graph
                 gen = np.asarray(st.gen, np.int32)
                 outs.append(self._complete(
@@ -815,6 +968,9 @@ class ServingEngine:
                 self._cache = self._reset_fn(self._cache, jnp.int32(s))
                 self._slots[s] = None
                 self._done[s] = True
+
+        if k_seen:
+            self.stats["k_mean"].append(float(np.mean(k_seen)))
 
         # drafter update cadence: maybe dispatch the next update — WITHOUT
         # blocking on it; the engine decodes one superstep on stale
@@ -909,9 +1065,12 @@ class ServingEngine:
                       "prefill_chunks": 0, "prefill_tokens": 0,
                       "max_tick_prefill_tokens": 0,
                       "latencies": deque(maxlen=self.latency_window),
-                      "tick_s": deque(maxlen=self.latency_window)}
+                      "tick_s": deque(maxlen=self.latency_window),
+                      "k_mean": deque(maxlen=self.latency_window)}
         self._slot_accepted[:] = 0
         self._slot_drafted[:] = 0
+        self._slot_committed[:] = 0
+        self._slot_blocks[:] = 0
 
     @property
     def acceptance(self) -> float:
@@ -921,6 +1080,32 @@ class ServingEngine:
     def slot_acceptance(self) -> np.ndarray:
         """(num_slots,) lifetime acceptance rate per lane."""
         return self._slot_accepted / np.maximum(self._slot_drafted, 1)
+
+    def adaptive_stats(self) -> dict:
+        """Depth-controller observability: the current per-slot depth /
+        acceptance-EMA, per-slot depth trajectory summaries (mean depth over
+        the slot's live blocks), and drafted-vs-committed efficiency — how
+        many committed tokens each drafted token bought, the quantity
+        adaptive depth exists to raise.  Meaningful (but still reported,
+        pinned at k_spec) when ``adaptive_k=False``."""
+        drafted = max(self.stats["drafted"], 1)
+        recent = list(self.stats["k_mean"])
+        return {
+            "adaptive": self._depth is not None,
+            "k_min": self._depth.k_min if self._depth else
+                self.model.cfg.dvi.k_spec,
+            "k_max": self._k_worst,
+            "k_lane": self._k_host.copy(),
+            "accept_ema": self._ema_host.copy(),
+            "slot_mean_depth": self._slot_drafted
+                / np.maximum(self._slot_blocks, 1),
+            "slot_draft_efficiency": self._slot_committed
+                / np.maximum(self._slot_drafted, 1),
+            "mean_depth": self.stats["drafted"]
+                / max(self.stats["blocks"], 1),
+            "draft_efficiency": self.stats["committed"] / drafted,
+            "k_mean_recent": float(np.mean(recent)) if recent else 0.0,
+        }
 
     def kv_stats(self) -> dict:
         """Paged-pool observability: utilization / watermark / fragmentation

@@ -28,6 +28,20 @@ slots are overwritten by the next block's eager writes and are excluded
 from attention by the ``pos <= qpos`` mask meanwhile.  Pages return to the
 free list only on retirement / preemption (``KVPool.free``).
 
+Adaptive speculation depth (ROADMAP: adaptive-depth contract) changes how
+MANY eager writes a block makes — a lane at depth ``k`` writes ``k+1``
+tokens — but not this rule: provisioning math splits into
+**reservation-class** decisions (admission gating, prompt trim,
+watermarks), which assume the worst-case depth ``k_max`` so a lane can
+never be admitted into a pool that couldn't survive it drafting deep, and
+**growth-class** decisions (per-superstep page growth), which use the
+lane's live depth plus the controller's cooldown-derived rise bound.  A
+lane that throttles below its provisioned depth may still eagerly write
+up to the dispatch depth ``K_blk``; those surplus writes land inside the
+lane's provisioned pages (or on the null page past the table) and are the
+same rejected-draft garbage this section already covers — never committed,
+never attended.
+
 Invariants (checked by the property test in tests/test_paged_kv.py)
 -------------------------------------------------------------------
 * a physical page is owned by at most one owner at a time,

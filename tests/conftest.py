@@ -31,6 +31,20 @@ def make_aux(cfg, B, seed=3):
     return aux or None
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_compile_cache():
+    """Drop XLA's in-process executable caches between test modules.
+
+    The caches grow without bound over the full suite (every module builds
+    fresh Model closures, so nothing is ever evicted); on single-core CPU
+    runners the accumulated compiler state deterministically segfaults
+    LLVM mid-compile ~190 tests in.  Modules don't share compiled
+    functions (model fixtures are module-scoped), so clearing between
+    modules only re-pays compiles the next module would do anyway."""
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def tiny_models():
     """Cache of (cfg, model, params) per arch — init once per session."""

@@ -1,0 +1,289 @@
+"""Per-lane adaptive speculation depth (repro.core.schedule.DepthConfig +
+the k_lane threading through spec_superstep and the serving engine).
+
+Covers the adaptive-depth contract (ROADMAP):
+
+1. PINNED controller == main: running the ragged-depth code path with depth
+   pinned at k_spec (k_lane full of K at the spec level; k_min=k_max=k_init
+   at the engine level) must produce bit-identical streams and counters to
+   the fixed-K path — greedy and rejection-sampled, contiguous and paged,
+   sync_every 1 and 8.
+2. Controller properties: depth stays in [k_min, min(k_max, k_hi)], rises
+   on sustained acceptance, falls on sustained rejection, freezes on masked
+   lanes, and the host-side `max_depth_rises` bound is never beaten by the
+   in-graph controller.
+3. Engine state hygiene: a recycled slot must NOT inherit the previous
+   request's depth/EMA (reset at admission).
+4. Page-reservation safety: an adversarial controller that swings depth
+   from the floor to the ceiling inside a superstep, on a tight pool, must
+   neither corrupt streams (vs a contiguous fixed-K reference) nor leak or
+   overrun pages — reservations use worst-case K_max, growth uses live k
+   plus the rise bound, so provisioning always covers the realized depth.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.core import lora, online, spec
+from repro.core.schedule import DepthConfig, depth_update, init_depth_state, \
+    max_depth_rises
+from repro.models.model import build_model
+from repro.serving import Request, ServingEngine
+
+EOS = 1
+
+
+@pytest.fixture(scope="module")
+def backbone():
+    cfg = tiny_cfg("vicuna-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dvi = lora.init_draft_params(jax.random.PRNGKey(5), cfg)
+    return cfg, model, params, dvi
+
+
+def _prefill(model, prompts, params):
+    _, cache, _ = model.prefill(params, prompts[:, :-1], max_len=96)
+    return cache, prompts[:, -1]
+
+
+def _prefill_paged(cfg, model, params, prompts, ps=4, mps=24):
+    import repro.models.transformer as tfm
+    from repro.serving.kv_pool import KVPool, pages_for
+    B, Tp = prompts.shape
+    K = cfg.dvi.k_spec
+    pool = KVPool(num_pages=B * mps, page_size=ps)
+    cache = model.init_paged_cache(B, pool.num_pages, ps, mps)
+    for b in range(B):
+        need = pages_for(Tp - 1 + 10 * (K + 1), ps)
+        row = np.full(mps, -1, np.int32)
+        row[:need] = pool.alloc(need, owner=b)
+        cache = tfm.map_slot_pages(cache, jnp.int32(b), jnp.asarray(row))
+        _, pc, _ = model.prefill(params, prompts[b:b + 1, :-1],
+                                 max_len=Tp - 1)
+        cache = tfm.insert_slot(cfg, cache, pc, jnp.int32(b))
+    return cache, prompts[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# 1. pinned controller == main (spec level: greedy + sampled x layouts)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("steps", [1, 8])
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+def test_pinned_k_lane_bit_identical(backbone, steps, temperature, layout):
+    cfg, model, params, dvi = backbone
+    K = cfg.dvi.k_spec
+    B, Tp = 3, 8
+    prompts = jax.random.randint(jax.random.PRNGKey(7), (B, Tp), 2,
+                                 cfg.vocab_size)
+    budget = jnp.asarray(np.array([4, 9, 30], np.int32))
+    key = jax.random.PRNGKey(99)
+    pf = _prefill_paged if layout == "paged" else _prefill
+    pf_args = (cfg, model, params, prompts) if layout == "paged" else \
+        (model, prompts, params)
+
+    cache, pending = pf(*pf_args)
+    ref = spec.spec_superstep(model, params, dvi, pending, cache,
+                              steps=steps, budget=budget, eos_id=EOS,
+                              temperature=temperature, key=key)
+    cache, pending = pf(*pf_args)
+    pin = spec.spec_superstep(model, params, dvi, pending, cache,
+                              steps=steps, budget=budget, eos_id=EOS,
+                              temperature=temperature, key=key,
+                              k_lane=jnp.full((B,), K, jnp.int32))
+
+    np.testing.assert_array_equal(np.asarray(ref.gen_buf),
+                                  np.asarray(pin.gen_buf))
+    np.testing.assert_array_equal(np.asarray(ref.gen_count),
+                                  np.asarray(pin.gen_count))
+    np.testing.assert_array_equal(np.asarray(ref.done), np.asarray(pin.done))
+    np.testing.assert_array_equal(np.asarray(ref.lane_committed),
+                                  np.asarray(pin.lane_committed))
+    np.testing.assert_array_equal(np.asarray(ref.lane_accepted),
+                                  np.asarray(pin.lane_accepted))
+    # fixed path reports K*blocks drafted; pinned ragged path must agree
+    np.testing.assert_array_equal(np.asarray(ref.lane_drafted),
+                                  np.asarray(pin.lane_drafted))
+    np.testing.assert_array_equal(np.asarray(ref.pending),
+                                  np.asarray(pin.pending))
+
+
+# ---------------------------------------------------------------------------
+# 1b. pinned controller == main (engine level: layouts x sync_every)
+# ---------------------------------------------------------------------------
+
+def _requests(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        Tp = int(rng.choice([6, 9, 12]))
+        mn = int(rng.choice([6, 10, 16]))
+        p = np.asarray(jax.random.randint(jax.random.PRNGKey(100 + i), (Tp,),
+                                          2, cfg.vocab_size), np.int32)
+        reqs.append(Request(uid=i, prompt=p, max_new=mn))
+    return reqs
+
+
+def _serve(model, params, reqs, **kw):
+    state = online.init_trainer(model, jax.random.PRNGKey(3))
+    eng = ServingEngine(model, params, state, scheduler="continuous",
+                        max_new=16, **kw)
+    for r in reqs:
+        eng.submit(r)
+    outs = eng.run(max_steps=2000)
+    assert len(outs) == len(reqs)
+    return eng, {o.uid: o.gen_tokens.tolist() for o in outs}
+
+
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+@pytest.mark.parametrize("sync_every", [1, 8])
+def test_engine_pinned_adaptive_matches_fixed(backbone, layout, sync_every):
+    cfg, model, params, _ = backbone
+    K = cfg.dvi.k_spec
+    reqs = _requests(cfg, 5)
+    kw = dict(num_slots=2, sync_every=sync_every)
+    if layout == "paged":
+        kw.update(cache_len=40, kv_pages=40, kv_page_size=4)
+    ref_eng, ref = _serve(model, params, reqs, **kw)
+    pin_eng, pin = _serve(model, params, reqs, adaptive_k=True,
+                          depth_cfg=DepthConfig(k_min=K, k_max=K, k_init=K),
+                          **kw)
+    assert pin == ref, f"pinned adaptive diverged ({layout}, s{sync_every})"
+    # pinned depth must also draft exactly what fixed K drafts
+    assert pin_eng.stats["drafted"] == ref_eng.stats["drafted"]
+    assert pin_eng.stats["blocks"] == ref_eng.stats["blocks"]
+
+
+# ---------------------------------------------------------------------------
+# 2. controller properties
+# ---------------------------------------------------------------------------
+
+def _run_controller(dc, ms, live=None, k_hi=None, n=4):
+    k, ema, cool = init_depth_state(dc, n)
+    traj = [np.asarray(k)]
+    for m in ms:
+        live_t = jnp.ones((n,), bool) if live is None else live
+        k, ema, cool = depth_update(dc, k, ema, cool,
+                                    jnp.asarray(m, jnp.int32), live_t,
+                                    k_hi=k_hi)
+        traj.append(np.asarray(k))
+    return np.stack(traj), np.asarray(ema), np.asarray(cool)
+
+
+def test_depth_stays_in_bounds_random():
+    dc = DepthConfig(k_min=1, k_max=4, k_init=2, cooldown=1,
+                     hi=0.6, lo=0.4, ema_alpha=0.9)
+    rng = np.random.default_rng(0)
+    ms = [rng.integers(0, 5, size=4) for _ in range(64)]
+    traj, _, _ = _run_controller(dc, ms)
+    assert traj.min() >= dc.k_min and traj.max() <= dc.k_max
+
+
+def test_depth_respects_per_lane_ceiling():
+    dc = DepthConfig(k_min=1, k_max=4, k_init=1, cooldown=1,
+                     hi=0.1, lo=0.05, ema_init=0.9)   # always wants to rise
+    k_hi = jnp.asarray([1, 2, 3, 4], jnp.int32)       # provisioned depths
+    traj, _, _ = _run_controller(dc, [np.full(4, 4)] * 10, k_hi=k_hi)
+    np.testing.assert_array_equal(traj[-1], [1, 2, 3, 4])
+
+
+def test_depth_monotone_response():
+    """Sustained full acceptance climbs to k_max; sustained rejection sinks
+    to k_min — and each trajectory is monotone."""
+    dc = DepthConfig(k_min=1, k_max=4, k_init=2, cooldown=1,
+                     ema_alpha=0.5)
+    up, _, _ = _run_controller(dc, [np.array([4] * 4)] * 12)   # m = k always
+    dn, _, _ = _run_controller(dc, [np.zeros(4)] * 12)
+    assert (np.diff(up[:, 0]) >= 0).all() and up[-1, 0] == dc.k_max
+    assert (np.diff(dn[:, 0]) <= 0).all() and dn[-1, 0] == dc.k_min
+
+
+def test_masked_lanes_frozen():
+    dc = DepthConfig(k_min=1, k_max=4, k_init=2, cooldown=1, ema_alpha=0.9)
+    live = jnp.asarray([True, False, True, False])
+    traj, ema, _ = _run_controller(dc, [np.zeros(4)] * 8, live=live)
+    assert traj[-1][0] == dc.k_min and traj[-1][2] == dc.k_min
+    assert traj[-1][1] == dc.k_init and traj[-1][3] == dc.k_init
+    assert ema[1] == pytest.approx(dc.ema_init)      # EMA untouched too
+
+
+@pytest.mark.parametrize("cool0", [0, 1, 3, 7])
+@pytest.mark.parametrize("cooldown", [1, 2, 4])
+def test_max_depth_rises_bounds_controller(cool0, cooldown):
+    """The host-side bound must dominate the most rise-hungry stream the
+    in-graph controller can see (full acceptance every block)."""
+    dc = DepthConfig(k_min=1, k_max=64, k_init=1, cooldown=cooldown,
+                     hi=0.1, lo=0.05, ema_init=1.0)
+    for steps in (1, 2, 4, 8, 16):
+        k = jnp.asarray([1], jnp.int32)
+        ema = jnp.asarray([1.0], jnp.float32)
+        cool = jnp.asarray([cool0], jnp.int32)
+        for _ in range(steps):
+            k, ema, cool = depth_update(dc, k, ema, cool,
+                                        k, jnp.asarray([True]))
+        rises = int(k[0]) - 1
+        assert rises <= max_depth_rises(dc, steps, cool0), (
+            f"steps={steps}: controller rose {rises}x, bound "
+            f"{max_depth_rises(dc, steps, cool0)}")
+
+
+# ---------------------------------------------------------------------------
+# 3. slot reuse resets controller state
+# ---------------------------------------------------------------------------
+
+def test_slot_reuse_resets_depth_state(backbone):
+    cfg, model, params, _ = backbone
+    K = cfg.dvi.k_spec
+    state = online.init_trainer(model, jax.random.PRNGKey(3))
+    # aggressive downward controller: the (untrained) drafter's rejections
+    # drag the single lane to the floor within one request
+    dc = DepthConfig(k_min=1, k_max=K, k_init=K, cooldown=1,
+                     ema_alpha=0.9, hi=0.95, lo=0.80, ema_init=0.9)
+    eng = ServingEngine(model, params, state, scheduler="continuous",
+                        num_slots=1, max_new=16, sync_every=1,
+                        adaptive_k=True, depth_cfg=dc)
+    reqs = _requests(cfg, 2, seed=11)
+    eng.submit(reqs[0])
+    eng.run(max_steps=500)
+    assert int(eng._k_host[0]) < K, "first request should have throttled"
+    assert float(eng._ema_host[0]) < dc.lo
+    # second request recycles slot 0: admission must restart depth/EMA at
+    # init, not inherit the stale throttled state
+    eng.submit(reqs[1])
+    eng._admit_waiting()
+    assert int(eng._k_host[0]) == dc.k_init
+    assert float(eng._ema_host[0]) == pytest.approx(dc.ema_init)
+    assert int(eng._cool_host[0]) == 0
+    outs = eng.run(max_steps=500)
+    assert len(outs) == 1
+
+
+# ---------------------------------------------------------------------------
+# 4. page-reservation safety under depth swings on a tight pool
+# ---------------------------------------------------------------------------
+
+def test_paged_adaptive_swings_tight_pool(backbone):
+    """Adversarial controller: lanes admit at the floor and climb to the
+    ceiling within a superstep (cooldown=1, rise-always band).  On a tight
+    pool this maximizes the gap between admission-time depth and realized
+    depth — reservations (worst-case K_max) and growth (live k + rise
+    bound) must still cover every eager draft write: streams match the
+    contiguous fixed-K reference and the pool drains clean."""
+    cfg, model, params, _ = backbone
+    K = cfg.dvi.k_spec
+    reqs = _requests(cfg, 5, seed=2)
+    _, ref = _serve(model, params, reqs, num_slots=2, sync_every=8)
+    dc = DepthConfig(k_min=1, k_max=K, k_init=1, cooldown=1,
+                     hi=0.1, lo=0.05, ema_init=0.9)    # floor -> ceiling
+    for pages in (40, 16):          # ample, and tight enough to preempt
+        eng, got = _serve(model, params, reqs, num_slots=2, sync_every=8,
+                          cache_len=40, kv_pages=pages, kv_page_size=4,
+                          adaptive_k=True, depth_cfg=dc)
+        assert got == ref, f"paged adaptive (pages={pages}) diverged"
+        assert eng.kv_stats()["used_pages"] == 0, "pool must drain"
+    # the swing actually happened: lanes ended above the floor
+    assert int(np.max(eng._k_host)) > 1
