@@ -79,8 +79,10 @@ MAX_NEWS = (8, 16, 24)
 MIXED_SHORT, MIXED_LONG = 8, 48
 # bench-trajectory artifact schema; bump when record keys change shape so
 # scripts/check_bench_regression.py can refuse incomparable baselines
-# (v3: per-arm acceptance_rate + mean_accepted_tokens, adaptive-K block)
-SCHEMA_VERSION = 3
+# (v3: per-arm acceptance_rate + mean_accepted_tokens, adaptive-K block;
+#  v4: per-arm `metrics` registry snapshot [dvi_serving_*/dvi_train_*],
+#  drift arms carry a per-update `train_timeline`)
+SCHEMA_VERSION = 4
 # drift-trace suite: qa traffic shifts to math at batch DRIFT_SHIFT
 DRIFT_PHASE1, DRIFT_PHASE2 = "qa", "math"
 
@@ -207,6 +209,10 @@ def report(name, eng, done, makespan, busy_s, token_budget=0):
         rec["admitted_per_gb"] = len(done) / gb
     if eng.paged:
         rec["kv"] = eng.kv_stats()
+    # v4: full registry snapshot (dvi_serving_* / dvi_train_*) — the metrics
+    # pipeline is always on (only the lifecycle tracer is opt-in), so every
+    # arm's record is schema-checkable by scripts/check_metrics_schema.py
+    rec["metrics"] = eng.metrics_snapshot()
     return rec
 
 
@@ -344,6 +350,19 @@ def run_drift_suite(args, model, params, tasks):
             rec["arms"][label]["adaptive"] = {
                 k: (v.tolist() if hasattr(v, "tolist") else v)
                 for k, v in eng.adaptive_stats().items()}
+        # acceptance-recovery timeline: one row per drafter update (step,
+        # schedule phase, loss components, EMA before/after) — the
+        # dvi_train_* story of the recovery the window means summarize
+        tt = eng.train_telemetry()
+        rec["arms"][label]["train_timeline"] = tt["history"]
+        rec["arms"][label]["metrics"] = eng.metrics_snapshot()
+        if tt["updates"]:
+            print(f"# {label} train: updates={tt['updates']} "
+                  f"phase={tt['phase_name']} loss={tt['loss']:.4f} "
+                  f"kl={tt['loss_kl']:.4f} ce={tt['loss_ce']:.4f} "
+                  f"pg={tt['loss_pg']:.4f} "
+                  f"acc_ema {tt['acceptance_ema_before']:.3f}->"
+                  f"{tt['acceptance_ema_after']:.3f}")
 
     oa, ff, fa = (rec["arms"][k]["windows"]
                   for k in ("online-adaptive", "frozen-fixed",
@@ -405,6 +424,17 @@ def main():
                     help="adaptive-k depth ceiling (0 = cfg k_spec)")
     ap.add_argument("--json", default="",
                     help="write per-arm records to this JSON file")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="run the fused (and paged) arms with the lifecycle "
+                         "tracer on; hard-asserts the zero-host-sync "
+                         "contract (host_syncs == dispatches, streams "
+                         "bit-identical to the untraced per-block arm)")
+    ap.add_argument("--trace-out", default="",
+                    help="write the fused arm's Chrome/Perfetto trace here "
+                         "(implies --telemetry)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the fused arm's metrics snapshot here "
+                         "(.json = snapshot JSON, else Prometheus text)")
     ap.add_argument("--requests", type=int, default=0)
     ap.add_argument("--rate", type=float, default=0.0, help="arrivals/sec")
     ap.add_argument("--num-slots", type=int, default=8)
@@ -419,6 +449,8 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.trace_out:
+        args.telemetry = True
 
     if args.sync_every < 2:
         ap.error("--sync-every must be >= 2: the per-block `continuous` arm "
@@ -453,10 +485,15 @@ def main():
     cap = (max(PROMPT_LENS) + max(MAX_NEWS) + cfg.dvi.k_spec + 2
            + tfm.RING_SLACK)
     budget = slots * cap                       # token-slots both arms share
+    # the fused (and paged) arms carry the lifecycle tracer when requested;
+    # the per-block reference arm stays untraced so the stream comparison
+    # below doubles as the telemetry bit-identity gate
+    telem_kw = {"telemetry": True} if args.telemetry else {}
     c1 = run_trace("continuous", model, params, trace, slots, args.batch,
                    warm=warm, engine_kw={"sync_every": 1})
     cS = run_trace("continuous", model, params, trace, slots, args.batch,
-                   warm=warm, engine_kw={"sync_every": S, **adapt_kw})
+                   warm=warm, engine_kw={"sync_every": S, **adapt_kw,
+                                         **telem_kw})
     recs = [report("sync", *run_trace("sync", model, params, trace, slots,
                                       args.batch, warm=warm), budget),
             report("continuous", *c1, budget),
@@ -480,6 +517,33 @@ def main():
           f"{recs[2]['host_wait_frac']:.2f}, streams_match={match}")
     summary = {"fused_speedup_blocks_per_s": fused_speedup,
                "host_sync_reduction": sync_cut, "streams_match": match}
+
+    if args.telemetry:
+        # zero-host-sync contract: the tracer rides the ONE device_get per
+        # superstep the engine already performs; any extra sync shows up as
+        # host_syncs > dispatches.  Streams must also match the untraced
+        # per-block arm (covered by `match` above) — both are hard gates.
+        t_eng = cS[0]
+        hs, dp = t_eng.stats["host_syncs"], t_eng.stats["dispatches"]
+        if hs != dp:
+            raise SystemExit(
+                f"FATAL: telemetry added host syncs (host_syncs={hs}, "
+                f"dispatches={dp}) — the zero-host-sync contract is broken")
+        if not match:
+            raise SystemExit(
+                "FATAL: telemetry-on fused streams diverged from the "
+                "untraced per-block scheduler")
+        print(f"# telemetry: host_syncs={hs} == dispatches={dp}, "
+              f"trace_events={len(t_eng.trace_dict()['traceEvents'])}, "
+              f"streams_match={match}")
+        summary["telemetry"] = {"host_syncs": hs, "dispatches": dp,
+                                "streams_match": match}
+        if args.trace_out:
+            t_eng.write_trace(args.trace_out)
+            print(f"# wrote {args.trace_out}")
+        if args.metrics_out:
+            t_eng.write_metrics(args.metrics_out)
+            print(f"# wrote {args.metrics_out}")
 
     # mixed long/short-prompt trace: block-step cadence jitter with and
     # without chunked prefill.  Runs at a small superstep (latency-lean
@@ -523,7 +587,7 @@ def main():
             "continuous", model, params, trace, 2 * slots, args.batch,
             warm=warm, engine_kw={"kv_pages": pages,
                                   "kv_page_size": args.kv_page_size,
-                                  "sync_every": S, **adapt_kw}),
+                                  "sync_every": S, **adapt_kw, **telem_kw}),
             pages * args.kv_page_size))
         p = recs[-1]
         print(f"# paged vs continuous (equal kv memory, 2x lanes): "
@@ -532,6 +596,12 @@ def main():
               f"{recs[1]['peak_live_slots']}, "
               f"preemptions={p['kv']['preemptions']}, "
               f"peak_util={p['kv']['peak_utilization']:.2f}")
+        if args.telemetry and (p["dispatch"]["host_syncs"]
+                               != p["dispatch"]["dispatches"]):
+            raise SystemExit(
+                f"FATAL: telemetry added host syncs on the paged arm "
+                f"(host_syncs={p['dispatch']['host_syncs']}, "
+                f"dispatches={p['dispatch']['dispatches']})")
 
     if args.json:
         with open(args.json, "w") as f:

@@ -71,7 +71,7 @@ def run(learn: bool, model, params, tasks, warm_state):
         db = eng.stats["blocks"] - before[2]
         acc.append(da / max(dd, 1))
         depth.append(dd / max(db, 1))   # drafted per block = realized K
-    return acc, depth
+    return acc, depth, eng
 
 
 def main():
@@ -93,8 +93,8 @@ def main():
                                  tasks.stream((PHASE1,), 40, 8, 16, seed=1),
                                  warm, max_new=MAX_NEW, lr=3e-3)
 
-    f_acc, f_k = run(False, model, params, tasks, warm)
-    a_acc, a_k = run(True, model, params, tasks, warm)
+    f_acc, f_k, _ = run(False, model, params, tasks, warm)
+    a_acc, a_k, a_eng = run(True, model, params, tasks, warm)
 
     cols = range(0, N_BATCHES, 3)
     print(f"\nacceptance + adaptive K per batch (shift at batch {SHIFT_AT}, "
@@ -111,6 +111,29 @@ def main():
     print(f"post-shift mean depth: frozen={np.mean(f_k[SHIFT_AT + 5:]):.2f} "
           f"online={np.mean(a_k[SHIFT_AT + 5:]):.2f} "
           f"(the controller re-deepens only as acceptance recovers)")
+
+    # what the DVI training loop was doing while the online arm recovered:
+    # schedule phase, the three loss components, and the acceptance EMA the
+    # updates steered (dvi_train_* telemetry; see repro/serving/telemetry.py)
+    tt = a_eng.train_telemetry()
+    print(f"\nonline drafter training (dvi_train_*): updates={tt['updates']} "
+          f"step={tt['step']} phase={tt['phase_name']} "
+          f"(lambda_pg={tt['lambda_pg']:.2f} lambda_kl={tt['lambda_kl']:.2f} "
+          f"beta={tt['beta']:.3f})")
+    print(f"last update: loss={tt['loss']:.4f} kl={tt['loss_kl']:.4f} "
+          f"ce={tt['loss_ce']:.4f} pg={tt['loss_pg']:.4f} "
+          f"acc_ema {tt['acceptance_ema_before']:.3f}->"
+          f"{tt['acceptance_ema_after']:.3f} "
+          f"buffer={tt['buffer_count']:.0f}")
+    hist = tt["history"]
+    if hist:
+        cols_h = range(0, len(hist), max(1, len(hist) // 10))
+        print("update step:  " + " ".join(f"{hist[i]['step']:6d}"
+                                          for i in cols_h))
+        print("loss:         " + " ".join(f"{hist[i]['loss']:6.3f}"
+                                          for i in cols_h))
+        print("acc_ema:      " + " ".join(f"{hist[i]['ema_after']:6.3f}"
+                                          for i in cols_h))
 
 
 if __name__ == "__main__":

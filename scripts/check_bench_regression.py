@@ -116,11 +116,16 @@ def main():
         base = json.load(f)
 
     failures = []
-    if cur.get("schema_version") != base.get("schema_version"):
+    # v4 only ADDS keys over v3 (per-arm `metrics` snapshot, drift
+    # train_timeline), so a v3 baseline stays comparable with a v4 current —
+    # every key this script reads exists in both
+    compatible = {3, 4}
+    sv_cur, sv_base = cur.get("schema_version"), base.get("schema_version")
+    if sv_cur not in compatible or sv_base not in compatible:
         raise SystemExit(
-            f"baseline schema v{base.get('schema_version')} != current "
-            f"v{cur.get('schema_version')}: refresh benchmarks/baseline.json "
-            "(see this script's docstring)")
+            f"baseline schema v{sv_base} vs current v{sv_cur}: this script "
+            f"compares schema versions {sorted(compatible)} only — refresh "
+            "benchmarks/baseline.json (see this script's docstring)")
 
     if not cur.get("fused", {}).get("streams_match", False):
         failures.append("fused arm token streams diverged from per-block "

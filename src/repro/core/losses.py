@@ -87,6 +87,9 @@ def composite_loss(dvi_params: dict, model: Model, params: dict,
     dvi = cfg.dvi
     terms = loss_terms(model, params, dvi_params, batch)
     lam_pg, lam_kl = sched.lambda_schedule(t, dvi)
+    gate = sched.policy_gate(t, dvi)
+    beta = sched.beta_schedule(t, dvi)
+    pg_on = jnp.float32(0.0)     # on-policy PG term; stays 0 until it fires
 
     if mode == "kl":
         loss = terms["kl_tau"]
@@ -103,13 +106,15 @@ def composite_loss(dvi_params: dict, model: Model, params: dict,
             ft = loss_terms(model, params, dvi_params, fresh)
             adv = (ft["reward"] - baseline) * ft["mask"]
             pg_on = -(adv * ft["act_logp"]).sum() / jnp.maximum(ft["mask"].sum(), 1.0)
-            gate = sched.policy_gate(t, dvi)
-            beta = sched.beta_schedule(t, dvi)
             loss = loss + gate * (dvi.w_rl * pg_on + beta * ft["kl_1"])
 
+    # all three DVI components (KL / reward-masked CE / on-policy PG) plus
+    # the schedule state are always present — dvi_train_* telemetry reads
+    # these keys unconditionally regardless of mode/ablation
     metrics = {"loss": loss, "kl": terms["kl_tau"], "l_pg": terms["l_pg"],
                "l_ce": terms["l_ce"], "entropy": terms["entropy"],
-               "acc_rate": terms["acc_rate"], "lam_pg": lam_pg, "lam_kl": lam_kl}
+               "acc_rate": terms["acc_rate"], "lam_pg": lam_pg,
+               "lam_kl": lam_kl, "pg_on": pg_on, "beta": beta, "gate": gate}
     return loss, metrics
 
 

@@ -64,6 +64,10 @@ def make_update_fn(model: Model, mode: str = "full", lr: float = 1e-3):
         new_baseline = (dvi.baseline_ema * baseline
                         + (1 - dvi.baseline_ema) * metrics["acc_rate"])
         metrics["gnorm"] = gnorm
+        # acceptance-EMA baseline around the update (dvi_train_* telemetry)
+        metrics["baseline_before"] = baseline
+        metrics["baseline_after"] = new_baseline
+        metrics["buffer_count"] = buf["count"]
         return new_dvi, new_opt, new_baseline, metrics
 
     return update

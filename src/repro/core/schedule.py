@@ -54,6 +54,28 @@ def policy_gate(t, dvi: DVIConfig):
     return lam_pg / max(dvi.lambda_pg_max, 1e-9)
 
 
+def phase_info(t: int, dvi: DVIConfig) -> dict:
+    """Host-side, math-only mirror of the KL->RL schedules at step `t` —
+    for telemetry (the serving hot path must not touch the device or build
+    jnp graphs just to report where the schedule sits).  Returns
+    ``{phase, phase_name, lambda_pg, lambda_kl, beta, gate}`` with
+    phase 0=warmup, 1=ramp, 2=rl.  Kept numerically identical to
+    ``lambda_schedule`` / ``beta_schedule`` / ``policy_gate`` above
+    (asserted in tests/test_telemetry.py)."""
+    import math as _math
+    t = float(t)
+    frac = min(max((t - dvi.warmup_steps) / max(dvi.ramp_steps, 1), 0.0), 1.0)
+    lam_pg = frac * dvi.lambda_pg_max
+    lam_kl = dvi.lambda_kl0 - frac * (dvi.lambda_kl0 - dvi.lambda_kl_min)
+    beta = dvi.beta_min + (dvi.beta0 - dvi.beta_min) * _math.exp(
+        -t / max(dvi.beta_decay_steps, 1))
+    phase = 0 if t < dvi.warmup_steps else (1 if frac < 1.0 else 2)
+    return {"phase": phase,
+            "phase_name": ("warmup", "ramp", "rl")[phase],
+            "lambda_pg": lam_pg, "lambda_kl": lam_kl, "beta": beta,
+            "gate": lam_pg / max(dvi.lambda_pg_max, 1e-9)}
+
+
 # ---------------------------------------------------------------------------
 # Per-lane adaptive speculation depth (acceptance-EMA target tracking, AIMD)
 # ---------------------------------------------------------------------------

@@ -74,6 +74,8 @@ class SuperstepResult(NamedTuple):
     k_lane: jax.Array          # (B,) speculation depth after the last block
     accept_ema: jax.Array      # (B,) depth controller acceptance EMA
     k_cool: jax.Array          # (B,) depth controller cooldown counter
+    accept_hist: jax.Array     # (K+1,) live blocks by accepted drafts m
+    depth_hist: jax.Array      # (K+1,) live blocks by depth k they ran at
     cache: dict                # advanced decode cache
     buffer: Optional[dict]     # replay buffer with this superstep's tuples
     key: jax.Array             # threaded PRNG key (sampling path)
@@ -342,7 +344,7 @@ def spec_superstep(model: Model, params: dict, dvi_params: dict,
 
     def body(carry):
         (i, pending, done, gen_buf, gen_count, blocks, committed, accepted,
-         drafted, k, ema, cool, cache, buf, key) = carry
+         drafted, k, ema, cool, a_hist, d_hist, cache, buf, key) = carry
         live = (~done).astype(jnp.int32)
         blk = spec_block_step(model, params, dvi_params, pending, cache,
                               k_spec=K, done=done, temperature=temperature,
@@ -367,6 +369,12 @@ def spec_superstep(model: Model, params: dict, dvi_params: dict,
             buf = log_block_tuples(cfg, buf, blk, pending, done, k_spec=K,
                                    k_lane=k if ragged else None)
         drafted = drafted + k * live     # depth the block actually ran at
+        # telemetry histograms, in-graph and UNCONDITIONAL (telemetry on/off
+        # shares one compiled graph): per live block, bucket the verifier's
+        # accepted-draft count m and the depth k the block ran at.  Rides
+        # the superstep's existing host sync — zero extra device round-trips
+        a_hist = a_hist.at[blk.m].add(live, mode="drop")
+        d_hist = d_hist.at[k].add(live, mode="drop")
         if depth_cfg is not None:
             # controller sees THIS block's outcome (depth k, accepted m) and
             # adjusts for the next block; masked lanes keep frozen state
@@ -375,20 +383,21 @@ def spec_superstep(model: Model, params: dict, dvi_params: dict,
         return (i + 1, blk.pending, new_done, gen_buf, new_count,
                 blocks + live, committed + blk.accept,
                 accepted + blk.m * live, drafted,
-                k, ema, cool, blk.cache, buf, blk.key)
+                k, ema, cool, a_hist, d_hist, blk.cache, buf, blk.key)
 
     def cond(carry):
         return (carry[0] < steps) & ~jnp.all(carry[2])
 
+    hist0 = jnp.zeros((K + 1,), jnp.int32)
     carry = (jnp.int32(0), pending, done, jnp.zeros((B, cap), jnp.int32),
              zeros, zeros, zeros, zeros, zeros, k0, ema0, cool0,
-             cache, buf, key)
+             hist0, hist0, cache, buf, key)
     (_, pending, done, gen_buf, gen_count, blocks, committed, accepted,
-     drafted, k_out, ema_out, cool_out, cache, buf, key) = \
+     drafted, k_out, ema_out, cool_out, a_hist, d_hist, cache, buf, key) = \
         jax.lax.while_loop(cond, body, carry)
     return SuperstepResult(pending, done, gen_buf, gen_count, blocks,
                            committed, accepted, drafted, k_out, ema_out,
-                           cool_out, cache, buf, key)
+                           cool_out, a_hist, d_hist, cache, buf, key)
 
 
 def speculative_generate(model: Model, params: dict, dvi_params: dict,

@@ -81,7 +81,21 @@ def main():
     ap.add_argument("--no-learn", action="store_true")
     ap.add_argument("--pretrain-steps", type=int, default=200)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="record the per-request lifecycle trace (metrics "
+                         "registry is always on; adds zero host syncs)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the Chrome/Perfetto trace JSON here "
+                         "(implies --telemetry)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the final metrics snapshot here (.json = "
+                         "snapshot JSON, else Prometheus text format)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace of the first "
+                         "dispatches into this directory")
     args = ap.parse_args()
+    if args.trace_out:
+        args.telemetry = True
 
     cfg = get_config(args.arch, tiny=args.tiny).replace(dtype="float32")
     model = build_model(cfg)
@@ -99,8 +113,9 @@ def main():
                         sync_every=args.sync_every,
                         prefill_chunk=args.prefill_chunk,
                         adaptive_k=args.adaptive_k, k_min=args.k_min,
-                        k_max=args.k_max)
-    t0 = time.time()
+                        k_max=args.k_max, telemetry=args.telemetry,
+                        profile_dir=args.profile_dir)
+    t0 = time.monotonic()
     done = []
     for i in range(args.requests):
         cat = "qa" if (not args.shift_at or i < args.shift_at) else "math"
@@ -112,7 +127,7 @@ def main():
             print(f"[serve] {i+1:4d} reqs  acceptance={eng.acceptance:.3f} "
                   f"MAT={mat:.2f}  updates={eng.stats['updates']}")
     done.extend(eng.run())
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     toks = sum(len(c.gen_tokens) for c in done)
     lat = eng.latency_percentiles()
     print(f"[serve] {len(done)} completions, {toks} gen tokens in {dt:.1f}s "
@@ -144,6 +159,22 @@ def main():
               f"recent={ak['k_mean_recent']:.2f} "
               f"draft_efficiency={ak['draft_efficiency']:.2f} "
               f"k_lane={ak['k_lane'].tolist()}")
+    if not args.no_learn and args.scheduler == "continuous":
+        tt = eng.train_telemetry()
+        if tt["updates"]:
+            print(f"[serve] DVI train: updates={tt['updates']} "
+                  f"step={tt['step']} phase={tt['phase_name']} "
+                  f"loss={tt['loss']:.4f} kl={tt['loss_kl']:.4f} "
+                  f"ce={tt['loss_ce']:.4f} pg={tt['loss_pg']:.4f} "
+                  f"acc_ema {tt['acceptance_ema_before']:.3f}->"
+                  f"{tt['acceptance_ema_after']:.3f}")
+    if args.trace_out:
+        eng.write_trace(args.trace_out)
+        print(f"[serve] trace written to {args.trace_out} "
+              f"(open in Perfetto / chrome://tracing)")
+    if args.metrics_out:
+        eng.write_metrics(args.metrics_out)
+        print(f"[serve] metrics written to {args.metrics_out}")
 
 
 if __name__ == "__main__":

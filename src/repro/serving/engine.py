@@ -129,7 +129,7 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -141,6 +141,7 @@ from repro.core import spec as spec_mod
 from repro.models import transformer as tfm
 from repro.models.model import Model
 from repro.serving.kv_pool import KVPool
+from repro.serving.telemetry import ServingTelemetry
 
 
 @dataclass
@@ -202,15 +203,18 @@ class ServingEngine:
     k_min: int = 1                # adaptive: depth floor
     k_max: int = 0                # adaptive: depth ceiling (0 = cfg.dvi.k_spec)
     depth_cfg: Optional[schedule_mod.DepthConfig] = None  # full override
+    # monotonic clock for every elapsed-duration read (injectable so timing
+    # behaviour is testable deterministically; see tests/test_telemetry.py)
+    clock: Callable[[], float] = time.monotonic
+    telemetry: bool = False       # lifecycle tracer on (metrics always on)
+    trace_limit: int = 200_000    # tracer event cap (overflow -> dropped)
+    profile_dir: Optional[str] = None  # jax.profiler capture dir (optional)
+    profile_steps: int = 32       # dispatches inside the capture window
     _queue: Dict[int, List[Request]] = field(default_factory=dict)
     _fifo: deque = field(default_factory=deque)
-    stats: dict = field(default_factory=lambda: {
-        "requests": 0, "blocks": 0, "steps": 0, "committed": 0,
-        "accepted": 0, "drafted": 0, "updates": 0, "preemptions": 0,
-        "peak_live_slots": 0, "host_syncs": 0, "sync_wait_s": 0.0,
-        "dispatches": 0, "prefill_chunks": 0, "prefill_tokens": 0,
-        "max_tick_prefill_tokens": 0, "latencies": [], "tick_s": [],
-        "k_mean": []})
+    # registry-backed stats facade; built in __post_init__ from the ONE
+    # canonical schema (telemetry.LEGACY_STATS) — do not pass explicitly
+    stats: object = None
 
     def __post_init__(self):
         model, cfg = self.model, self.model.cfg
@@ -264,12 +268,26 @@ class ServingEngine:
         self._cool_host = np.zeros((self.num_slots,), np.int32)
         self._submit_t: Dict[int, float] = {}
         self._blocks_since_update = 0
-        self.stats["latencies"] = deque(self.stats["latencies"],
-                                        maxlen=self.latency_window)
-        self.stats["tick_s"] = deque(self.stats["tick_s"],
-                                     maxlen=self.latency_window)
-        self.stats["k_mean"] = deque(self.stats["k_mean"],
-                                     maxlen=self.latency_window)
+
+        # telemetry: the metrics registry (and the legacy `stats` facade
+        # over it) is ALWAYS on — it is pure host-side arithmetic riding
+        # observations the engine already materializes; the lifecycle
+        # tracer allocates only when `telemetry=True`.  The zero-host-sync
+        # contract (see telemetry.py) is enforced by tests.
+        self.telem = ServingTelemetry(
+            num_slots=self.num_slots, k_max=self._k_worst,
+            latency_window=self.latency_window, clock=self.clock,
+            trace=self.telemetry, trace_limit=self.trace_limit)
+        self.stats = self.telem.stats
+        # host mirror of the optimizer step (drives the KL->RL schedule
+        # gauges without touching the device on the hot path) and a bounded
+        # history of per-update training metrics for timeline reports
+        self._step_host = int(self.state.step)
+        self.train_history: deque = deque(maxlen=1024)
+        self._train_staged = None      # update metrics safe to materialize
+        self._train_fold_note = None   # metrics folded THIS harvest
+        self._profile_active = False
+        self._profile_left = 0
 
         # ONE jitted generation entry point (jit shape-specializes on
         # `prompts`, so per-bucket closure caching was pure duplication);
@@ -397,7 +415,14 @@ class ServingEngine:
         return self.buckets[-1]
 
     def submit(self, req: Request) -> None:
-        self._submit_t[req.uid] = time.perf_counter()
+        now = self.clock()
+        self._submit_t[req.uid] = now
+        tr = self.telem.tracer
+        if tr is not None and self.scheduler == "continuous":
+            tr.async_begin("request", req.uid, now,
+                           args={"prompt_len": int(len(req.prompt)),
+                                 "max_new": int(req.max_new)})
+            tr.async_begin("queued", req.uid, now)
         if self.scheduler == "continuous":
             self._fifo.append(req)
         else:
@@ -416,6 +441,8 @@ class ServingEngine:
 
     def _drafter_update(self, n: int) -> None:
         for _ in range(n):
+            t_disp = self.clock()
+            step_u = self._step_host
             self._key, sub = jax.random.split(self._key)
             (self.state.dvi_params, self.state.opt_state,
              self.state.baseline, _m) = self._update_fn(
@@ -423,11 +450,35 @@ class ServingEngine:
                 self.state.buf, self.state.baseline, self.state.step, sub)
             self.state.step = self.state.step + 1
             self.stats["updates"] += 1
+            self._note_update_dispatched()
+            # legacy sync path: the metrics stay device-resident; the
+            # train_telemetry() accessor materializes them off the hot path
+            self._train_staged = (_m, t_disp, self.clock(), step_u)
+
+    def _note_update_dispatched(self) -> None:
+        """Advance the host step mirror + schedule-phase gauges — pure host
+        math (`schedule.phase_info`), no device touch."""
+        self._step_host += 1
+        ph = schedule_mod.phase_info(self._step_host, self.model.cfg.dvi)
+        t = self.telem
+        t.g_step.set(self._step_host)
+        t.g_phase.set(ph["phase"])
+        t.g_lambda_pg.set(ph["lambda_pg"])
+        t.g_lambda_kl.set(ph["lambda_kl"])
+        t.g_beta.set(ph["beta"])
 
     def _complete(self, uid: int, tokens: np.ndarray, gen_tokens: np.ndarray,
                   mat: float, wall_s: float) -> Completion:
-        lat = time.perf_counter() - self._submit_t.pop(uid, time.perf_counter())
+        now = self.clock()
+        lat = now - self._submit_t.pop(uid, now)
         self.stats["latencies"].append(lat)
+        self.telem.h_latency.observe(lat)
+        tr = self.telem.tracer
+        if tr is not None and self.scheduler == "continuous":
+            tr.async_end("decode", uid, now,
+                         args={"gen_tokens": int(len(gen_tokens))})
+            tr.async_end("request", uid, now,
+                         args={"latency_s": lat, "mat": mat})
         return Completion(uid=uid, tokens=tokens, gen_tokens=gen_tokens,
                           mat=mat, wall_s=wall_s, latency_s=lat)
 
@@ -449,11 +500,11 @@ class ServingEngine:
         live = jnp.arange(self.batch_size) < n_real
         prompts = jnp.asarray(np.stack([self._pad(r, bucket) for r in reqs]))
 
-        t0 = time.perf_counter()
+        t0 = self.clock()
         res = self._gen(self.params, self.state.dvi_params, prompts,
                         self.state.buf, live, int(self.max_new))
         jax.block_until_ready(res.tokens)
-        wall = time.perf_counter() - t0
+        wall = self.clock() - t0
         self.state.buf = res.buffer
 
         if self.learn:
@@ -608,7 +659,9 @@ class ServingEngine:
         itself must provision the horizon; later growth is on demand.
         `reserve`: extra pages kept free on top of the watermark
         (pre-admission passes the live lanes' growth demand)."""
+        tr = self.telem.tracer
         while self._fifo and not all(s is not None for s in self._slots):
+            t_a0 = self.clock()
             slot = next(i for i, s in enumerate(self._slots) if s is None)
             req = self._fifo[0]
             max_new = min(req.max_new, self.max_new)
@@ -630,7 +683,14 @@ class ServingEngine:
                         else self._pages_needed(c1, max_new - gen_carry))
                 if not self._pool.can_alloc(need,
                                             self.kv_watermark + reserve):
-                    break                    # head-of-line wait for pages
+                    # head-of-line wait for pages (watermark/reserve hit)
+                    self.telem.c_watermark.inc()
+                    if tr is not None:
+                        tr.instant(self.telem.tid_engine, "pool_watermark",
+                                   args={"uid": req.uid, "need": need,
+                                         "free": self._pool.free_pages,
+                                         "reserve": reserve})
+                    break
                 self._fifo.popleft()
                 pages = self._pool.alloc(need, owner=req.uid)
                 row = np.full(self._mps, -1, np.int32)
@@ -675,6 +735,18 @@ class ServingEngine:
             # a mid-prefill lane stays done-masked: it rides supersteps
             # inert until its finishing chunk flips it live
             self._done[slot] = chunked
+            if tr is not None:
+                now = self.clock()
+                tr.span(slot, f"admit u{req.uid}", t_a0, now,
+                        args={"uid": req.uid, "chunked": chunked,
+                              "prefilled": c1})
+                tr.async_end("queued", req.uid, now)
+                tr.async_begin("prefill", req.uid, now,
+                               args={"slot": slot, "chunked": chunked})
+                if not chunked:    # one-shot: lane decodes from this tick
+                    tr.async_end("prefill", req.uid, now)
+                    tr.async_begin("decode", req.uid, now,
+                                   args={"slot": slot})
 
     def _preempt(self, slot: int) -> None:
         """Evict lane `slot` mid-decode: free its pages, unmap its row, and
@@ -698,6 +770,15 @@ class ServingEngine:
         self._fifo.appendleft(Request(uid=st.uid, prompt=combined,
                                       max_new=st.max_new))
         self._cache = self._reset_fn(self._cache, jnp.int32(slot))
+        tr = self.telem.tracer
+        if tr is not None:
+            now = self.clock()
+            tr.instant(slot, "preempt", now,
+                       args={"uid": st.uid, "gen_len": len(st.gen),
+                             "mid_prefill": st.pf_pos is not None})
+            tr.async_end("prefill" if st.pf_pos is not None else "decode",
+                         st.uid, now, args={"preempted": True})
+            tr.async_begin("queued", st.uid, now, args={"replay": True})
         self._slots[slot] = None
         self._done[slot] = True
         self.stats["preemptions"] += 1
@@ -828,24 +909,67 @@ class ServingEngine:
                                            jnp.asarray(self._tbl_host))
         if not take.any():
             return
+        t_c0 = self.clock()
         self._pending, self._cache = self._chunk_fn(
             self.params, self._cache, self._pending, jnp.asarray(tokens),
             jnp.asarray(take), jnp.asarray(finish_tok), jnp.asarray(finished))
+        t_c1 = self.clock()
         tick_tokens = int(take.sum())
         self.stats["prefill_chunks"] += 1
         self.stats["prefill_tokens"] += tick_tokens
         self.stats["max_tick_prefill_tokens"] = max(
             self.stats["max_tick_prefill_tokens"], tick_tokens)
+        tr = self.telem.tracer
         for s in lanes:
             st = self._slots[s]
             if st is None or not take[s]:
                 continue
             st.pf_pos += int(take[s])
             st.cache_len += int(take[s])
+            if tr is not None:
+                tr.span(s, "prefill_chunk", t_c0, t_c1,
+                        args={"uid": st.uid, "tokens": int(take[s]),
+                              "pos": int(st.pf_pos)})
             if finished[s]:
                 st.pf_pos = None
                 st.pf_prompt = None
                 self._done[s] = False
+                if tr is not None:
+                    tr.async_end("prefill", st.uid, t_c1)
+                    tr.async_begin("decode", st.uid, t_c1,
+                                   args={"slot": s})
+
+    def _maybe_profile_start(self):
+        """Optional ``jax.profiler`` capture window (``profile_dir``): start
+        at the first dispatch, annotate every dispatch as a step, stop after
+        ``profile_steps`` dispatches.  Best-effort — profiler failures never
+        take down serving."""
+        if self.profile_dir and not self._profile_active:
+            try:
+                jax.profiler.start_trace(self.profile_dir)
+                self._profile_active = True
+                self._profile_left = max(1, int(self.profile_steps))
+            except Exception:
+                self.profile_dir = None
+        if not self._profile_active:
+            return None
+        try:
+            return jax.profiler.StepTraceAnnotation(
+                "superstep", step_num=int(self.stats["dispatches"]))
+        except Exception:
+            return None
+
+    def _maybe_profile_stop(self) -> None:
+        if not self._profile_active:
+            return
+        self._profile_left -= 1
+        if self._profile_left <= 0:
+            try:
+                jax.profiler.stop_trace()
+            except Exception:
+                pass
+            self._profile_active = False
+            self.profile_dir = None     # window consumed; do not restart
 
     def _dispatch_superstep(self) -> None:
         """Dispatch one fused superstep over the live lanes and return
@@ -855,6 +979,9 @@ class ServingEngine:
         for s, st in enumerate(self._slots):
             if st is not None:
                 budget[s] = st.max_new - len(st.gen)
+        ann = self._maybe_profile_start()
+        if ann is not None:
+            ann.__enter__()
         if self._depth is not None:
             # per-lane depth ceiling = what growth provisioned pages for;
             # the draft-scan width K_blk is the max ceiling over lanes that
@@ -879,14 +1006,18 @@ class ServingEngine:
                                      self._pending, self._cache,
                                      self.state.buf, jnp.asarray(self._done),
                                      jnp.asarray(budget))
+        if ann is not None:
+            ann.__exit__(None, None, None)
+        self._maybe_profile_stop()
         # engine state advances to the (not yet materialized) outputs; every
         # follow-up device op (admission, reset, next superstep) chains on
         # them without a host round-trip
         self._pending, self._cache = res.pending, res.cache
         self.state.buf = res.buffer
         lanes = [s for s, st in enumerate(self._slots) if st is not None]
-        mark = self._clock + (time.perf_counter() - self._tick_t0)
-        self._inflight = (res, mark, lanes)
+        now = self.clock()
+        mark = self._clock + (now - self._tick_t0)
+        self._inflight = (res, mark, lanes, now)
         self.stats["dispatches"] += 1
         self.stats["peak_live_slots"] = max(self.stats["peak_live_slots"],
                                             len(lanes))
@@ -894,28 +1025,64 @@ class ServingEngine:
     def _harvest(self) -> List[Completion]:
         """Materialize the in-flight superstep's compact summary (the ONLY
         device->host sync on the continuous hot path), fold it into host
-        bookkeeping, retire finished lanes, and manage drafter updates."""
+        bookkeeping, retire finished lanes, and manage drafter updates.
+
+        Telemetry rides this same single ``device_get``: the in-graph
+        per-block histograms travel with the summary, and a folded drafter
+        update's loss metrics are materialized one harvest LATER (by then
+        the superstep that consumed the new params has completed, so the
+        update must have too — reading its metrics cannot block)."""
         # fold a completed drafter update FIRST — even with no in-flight
         # superstep (engine drained and is being stepped again), so a
         # trained update dispatched on the last tick of a burst is never
         # dropped; the next dispatch below then uses the fresh params
+        tr = self.telem.tracer
+        fold_note = None
         if self._update_inflight is not None:
             (self.state.dvi_params, self.state.opt_state,
-             self.state.baseline) = self._update_inflight
+             self.state.baseline, m_dev, t_disp_u, step_u) = \
+                self._update_inflight
             self._update_inflight = None
+            t_fold = self.clock()
+            # update "latency" = dispatch -> fold staleness window (how long
+            # the engine decoded on the pre-update drafter), a host quantity
+            self.telem.h_update_span.observe(t_fold - t_disp_u)
+            if tr is not None:
+                tr.span(self.telem.tid_train, f"drafter_update t{step_u}",
+                        t_disp_u, t_fold, args={"step": step_u}, cat="train")
+            fold_note = (m_dev, t_disp_u, t_fold, step_u)
         if self._inflight is None:
+            if fold_note is not None:
+                self._train_staged = fold_note
             return []
-        res, clock_mark, lanes = self._inflight
+        res, clock_mark, lanes, t_disp_wall = self._inflight
         self._inflight = None
-        t0 = time.perf_counter()
-        (done_np, cnt_np, gen_np, blocks_np, committed_np, accepted_np,
-         drafted_np, k_np, ema_np, cool_np, buf_count) = jax.device_get(
+        staged = self._train_staged
+        t0 = self.clock()
+        main, m_host = jax.device_get((
             (res.done, res.gen_count, res.gen_buf, res.lane_blocks,
              res.lane_committed, res.lane_accepted, res.lane_drafted,
-             res.k_lane, res.accept_ema, res.k_cool, res.buffer["count"]))
-        now = time.perf_counter()
+             res.k_lane, res.accept_ema, res.k_cool,
+             res.accept_hist, res.depth_hist, res.buffer["count"]),
+            staged[0] if staged is not None else None))
+        (done_np, cnt_np, gen_np, blocks_np, committed_np, accepted_np,
+         drafted_np, k_np, ema_np, cool_np, ahist_np, dhist_np,
+         buf_count) = main
+        now = self.clock()
         self.stats["host_syncs"] += 1
         self.stats["sync_wait_s"] += now - t0
+        self.telem.h_sync_wait.observe(now - t0)
+        if tr is not None:
+            tr.span(self.telem.tid_engine, "sync_wait", t0, now)
+        if staged is not None:
+            self._fold_train_metrics(m_host, staged[1], staged[2], staged[3])
+            self._train_staged = None
+        # fold the in-graph per-block histograms (length K_blk+1, which may
+        # be below k_max+1 when an adaptive dispatch specialized shallower)
+        for i, n in enumerate(ahist_np):
+            self.telem.h_block_accept.add(int(i), int(n))
+        for i, n in enumerate(dhist_np):
+            self.telem.h_block_depth.add(int(i), int(n))
         # iterations the superstep actually executed (it exits early once
         # every lane is done): the longest-lived lane saw all of them
         self.stats["steps"] += int(blocks_np.max(initial=0))
@@ -950,6 +1117,17 @@ class ServingEngine:
             self._slot_committed[s] += int(committed_np[s])
             self._slot_blocks[s] += nb
             k_seen.append(int(k_np[s]))
+            if tr is not None:
+                tr.span(s, "superstep", t_disp_wall, now,
+                        args={"uid": st.uid, "blocks": nb,
+                              "committed": int(committed_np[s]),
+                              "accepted": int(accepted_np[s]),
+                              "k": int(k_np[s])})
+                if self._depth is not None and \
+                        int(k_np[s]) != int(self._k_host[s]):
+                    tr.instant(
+                        s, f"depth {int(self._k_host[s])}->{int(k_np[s])}",
+                        now, args={"uid": st.uid, "ema": float(ema_np[s])})
             # fold the lane's post-superstep controller state into the host
             # mirror (masked lanes came back unchanged, so this is exact)
             if self._depth is not None:
@@ -970,7 +1148,9 @@ class ServingEngine:
                 self._done[s] = True
 
         if k_seen:
-            self.stats["k_mean"].append(float(np.mean(k_seen)))
+            km = float(np.mean(k_seen))
+            self.stats["k_mean"].append(km)
+            self.telem.g_depth_mean.set(km)
 
         # drafter update cadence: maybe dispatch the next update — WITHOUT
         # blocking on it; the engine decodes one superstep on stale
@@ -980,13 +1160,24 @@ class ServingEngine:
         if (self.learn and self._blocks_since_update >= self.update_every
                 and int(buf_count) > 0):
             self._blocks_since_update = 0
+            t_disp_u = self.clock()
+            step_u = self._step_host
             self._key, sub = jax.random.split(self._key)
-            new_dvi, new_opt, new_base, _m = self._update_fn(
+            new_dvi, new_opt, new_base, m_dev = self._update_fn(
                 self.params, self.state.dvi_params, self.state.opt_state,
                 self.state.buf, self.state.baseline, self.state.step, sub)
-            self._update_inflight = (new_dvi, new_opt, new_base)
+            self._update_inflight = (new_dvi, new_opt, new_base, m_dev,
+                                     t_disp_u, step_u)
             self.state.step = self.state.step + 1
             self.stats["updates"] += 1
+            self._note_update_dispatched()
+            self.telem.g_buffer.set(int(buf_count))
+            if tr is not None:
+                tr.instant(self.telem.tid_train, "update_dispatch", t_disp_u,
+                           args={"step": step_u, "buffer": int(buf_count)},
+                           cat="train")
+        if fold_note is not None:
+            self._train_staged = fold_note
         return outs
 
     def _step_continuous(self) -> List[Completion]:
@@ -996,32 +1187,57 @@ class ServingEngine:
         finished lanes, grow paged lanes (preempting if the pool runs dry),
         admit into freshly freed lanes, advance mid-prefill lanes by one
         chunk, and dispatch the next superstep."""
-        self._tick_t0 = time.perf_counter()
+        self._tick_t0 = tick0 = self.clock()
+        tr = self.telem.tracer
+        tid_e = self.telem.tid_engine if tr is not None else 0
+
+        def _phase(name, fn, *a):
+            if tr is None:
+                return fn(*a)
+            p0 = self.clock()
+            try:
+                return fn(*a)
+            finally:
+                tr.span(tid_e, name, p0, self.clock())
+
         try:
             # pre-admission reserves the live lanes' worst-case growth
             # demand (paged): a new request must not grab pages this tick's
             # growth pass would claw back by preempting the admitted lane
-            self._admit_waiting(self._growth_reserve() if self.paged else 0)
-            outs = self._harvest()
+            _phase("pre_admit", self._admit_waiting,
+                   self._growth_reserve() if self.paged else 0)
+            outs = _phase("harvest", self._harvest)
             # grow BEFORE admitting: admission then sees the true residual
             # capacity, instead of grabbing pages that live lanes
             # immediately claw back by preempting the just-admitted lane.
             # Mid-prefill lanes' imminent chunk demand stays reserved even
             # here: _advance_prefill consumes it right after this admission.
             if self.paged:
-                self._grow_pages()
-            self._admit_waiting(self._prefill_reserve() if self.paged else 0)
+                _phase("grow_pages", self._grow_pages)
+            _phase("admit", self._admit_waiting,
+                   self._prefill_reserve() if self.paged else 0)
             # chunked prefill interleaves with supersteps: one bounded
             # chunk step per tick, then the superstep over decoding lanes
             # (lanes whose prefill finished this tick included)
-            self._advance_prefill()
+            _phase("prefill_chunk", self._advance_prefill)
             if any(st is not None and st.pf_pos is None
                    for st in self._slots):
-                self._dispatch_superstep()
+                _phase("dispatch", self._dispatch_superstep)
         finally:
-            dt = time.perf_counter() - self._tick_t0
+            dt = self.clock() - self._tick_t0
             self._clock += dt
             self.stats["tick_s"].append(dt)
+            self.telem.h_tick.observe(dt)
+            t = self.telem
+            t.g_live.set(self.active_slots)
+            t.g_queue.set(len(self._fifo))
+            if self.paged:
+                t.g_kv_used.set(self._pool.used_pages)
+                t.g_kv_free.set(self._pool.free_pages)
+            if tr is not None:
+                tr.span(tid_e, "tick", tick0, tick0 + dt,
+                        args={"live": self.active_slots,
+                              "queued": len(self._fifo)})
             self._tick_t0 = None
         return outs
 
@@ -1056,21 +1272,101 @@ class ServingEngine:
     # ------------------------------------------------------------------
 
     def reset_stats(self) -> None:
-        """Zero counters/latencies (e.g. after a warm-up run); jit caches,
-        drafter state, and live slots are untouched."""
-        self.stats = {"requests": 0, "blocks": 0, "steps": 0,
-                      "committed": 0, "accepted": 0, "drafted": 0,
-                      "updates": 0, "preemptions": 0, "peak_live_slots": 0,
-                      "host_syncs": 0, "sync_wait_s": 0.0, "dispatches": 0,
-                      "prefill_chunks": 0, "prefill_tokens": 0,
-                      "max_tick_prefill_tokens": 0,
-                      "latencies": deque(maxlen=self.latency_window),
-                      "tick_s": deque(maxlen=self.latency_window),
-                      "k_mean": deque(maxlen=self.latency_window)}
+        """Zero every registry metric, rolling window, and per-slot counter
+        (e.g. after a warm-up run); jit caches, drafter state, and live
+        slots are untouched.  The key set comes from the ONE canonical
+        schema (``telemetry.LEGACY_STATS`` + the registry declarations), so
+        it can never drift from the live stats view."""
+        self.telem.registry.reset()
+        self.stats.reset()           # registry metrics again (idempotent)
+        self.train_history.clear()   # + the deques behind the facade
         self._slot_accepted[:] = 0
         self._slot_drafted[:] = 0
         self._slot_committed[:] = 0
         self._slot_blocks[:] = 0
+
+    def _fold_train_metrics(self, m: dict, t_disp: float, t_fold: float,
+                            step_u: int) -> None:
+        """Publish one materialized drafter-update metrics dict (already on
+        host) into the ``dvi_train_*`` gauges + the bounded history."""
+        t = self.telem
+
+        def g(key):
+            return float(m[key]) if key in m else 0.0
+
+        t.g_loss.set(g("loss"))
+        t.g_loss_kl.set(g("kl"))
+        t.g_loss_ce.set(g("l_pg"))       # reward-masked CE component
+        t.g_loss_pg.set(g("pg_on"))      # on-policy policy-gradient term
+        t.g_lambda_pg.set(g("lam_pg"))
+        t.g_lambda_kl.set(g("lam_kl"))
+        t.g_beta.set(g("beta"))
+        t.g_acc_batch.set(g("acc_rate"))
+        t.g_ema_before.set(g("baseline_before"))
+        t.g_ema_after.set(g("baseline_after"))
+        t.g_buffer.set(g("buffer_count"))
+        t.g_gnorm.set(g("gnorm"))
+        self.train_history.append({
+            "step": step_u,
+            "phase": schedule_mod.phase_info(
+                step_u, self.model.cfg.dvi)["phase"],
+            "loss": g("loss"), "loss_kl": g("kl"), "loss_ce": g("l_pg"),
+            "loss_pg": g("pg_on"), "acceptance_batch": g("acc_rate"),
+            "ema_before": g("baseline_before"),
+            "ema_after": g("baseline_after"),
+            "buffer_count": g("buffer_count"),
+            "span_s": t_fold - t_disp})
+
+    def train_telemetry(self) -> dict:
+        """DVI training-loop telemetry: schedule phase, per-component
+        losses, acceptance EMA around updates, plus the bounded per-update
+        ``history``.  Materializes any still-staged update metrics — may
+        synchronize with the device, so call OFF the serving hot path
+        (between bursts, at shutdown, in benches)."""
+        if self._train_staged is not None:
+            m_dev, t_disp, t_fold, step_u = self._train_staged
+            self._train_staged = None
+            self._fold_train_metrics(jax.device_get(m_dev), t_disp, t_fold,
+                                     step_u)
+        t = self.telem
+        ph = schedule_mod.phase_info(self._step_host, self.model.cfg.dvi)
+        return {
+            "updates": int(self.stats["updates"]),
+            "step": self._step_host,
+            "phase": ph["phase"], "phase_name": ph["phase_name"],
+            "lambda_pg": ph["lambda_pg"], "lambda_kl": ph["lambda_kl"],
+            "beta": ph["beta"],
+            "loss": t.g_loss.value, "loss_kl": t.g_loss_kl.value,
+            "loss_ce": t.g_loss_ce.value, "loss_pg": t.g_loss_pg.value,
+            "acceptance_batch": t.g_acc_batch.value,
+            "acceptance_ema_before": t.g_ema_before.value,
+            "acceptance_ema_after": t.g_ema_after.value,
+            "buffer_count": t.g_buffer.value,
+            "history": list(self.train_history),
+        }
+
+    def metrics_snapshot(self) -> dict:
+        """JSON-able snapshot of every registry metric (see telemetry.py
+        for the schema reference)."""
+        return self.telem.snapshot()
+
+    def render_prometheus(self) -> str:
+        return self.telem.render_prometheus()
+
+    def write_metrics(self, path: str) -> None:
+        self.telem.write_metrics(path)
+
+    def trace_dict(self) -> Optional[dict]:
+        """The Chrome-trace dict (``telemetry=True`` runs only)."""
+        tr = self.telem.tracer
+        return tr.to_dict() if tr is not None else None
+
+    def write_trace(self, path: str) -> None:
+        tr = self.telem.tracer
+        if tr is None:
+            raise ValueError("tracing is off — construct the engine with "
+                             "telemetry=True to record a trace")
+        tr.write(path)
 
     @property
     def acceptance(self) -> float:
@@ -1123,10 +1419,13 @@ class ServingEngine:
         (rolling window, so long-running engines stay O(window) memory)."""
         lats = np.asarray(self.stats["latencies"], np.float64)
         if lats.size == 0:
-            return {"p50_s": 0.0, "p95_s": 0.0, "mean_s": 0.0}
+            # well-defined empty result: all-zero percentiles + an explicit
+            # count so callers can tell "no completions yet" from "fast"
+            return {"p50_s": 0.0, "p95_s": 0.0, "mean_s": 0.0, "count": 0}
         return {"p50_s": float(np.percentile(lats, 50)),
                 "p95_s": float(np.percentile(lats, 95)),
-                "mean_s": float(np.mean(lats))}
+                "mean_s": float(np.mean(lats)),
+                "count": int(lats.size)}
 
     def tick_percentiles(self) -> dict:
         """Engine-tick wall-time percentiles over the most recent
@@ -1135,10 +1434,11 @@ class ServingEngine:
         up as one fat tick; chunking spreads it)."""
         ts = np.asarray(self.stats["tick_s"], np.float64)
         if ts.size == 0:
-            return {"p50_s": 0.0, "p95_s": 0.0, "max_s": 0.0}
+            return {"p50_s": 0.0, "p95_s": 0.0, "max_s": 0.0, "count": 0}
         return {"p50_s": float(np.percentile(ts, 50)),
                 "p95_s": float(np.percentile(ts, 95)),
-                "max_s": float(ts.max())}
+                "max_s": float(ts.max()),
+                "count": int(ts.size)}
 
     def dispatch_stats(self) -> dict:
         """Host/device interplay on the continuous hot path: how often the
