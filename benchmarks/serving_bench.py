@@ -27,6 +27,16 @@ long prompt prefills one chunk per tick between decode supersteps instead
 of stalling admission for its whole prefill — with, again, bit-identical
 token streams (hard-asserted).
 
+The ``--prefix-cache`` arms race a shared-prefix tenant trace (N tenants
+x M requests over common system prompts) through the paged+chunked engine
+cold vs with prefix caching ON at EQUAL pool size: warm admission splices
+cached prompt pages (refcount sharing + copy-on-write tail) and prefills
+only the uncached tail.  Reported: admitted/s, prefill tokens saved, hit
+rate, tick p50/p95.  Hard-asserted: bit-identical committed streams, a
+real saving (>=1.5x admitted/s OR >=50% prefill skipped), exact
+hit/miss/lookup reconciliation, and a leak-free drain (refcounts back to
+baseline, every page free or evictable-cached).
+
 ``--adaptive-k`` (with ``--k-min``/``--k-max``) switches the fused and
 paged arms onto per-lane acceptance-driven speculation depth
 (repro.core.schedule).  Greedy committed streams are depth-independent,
@@ -81,8 +91,14 @@ MIXED_SHORT, MIXED_LONG = 8, 48
 # scripts/check_bench_regression.py can refuse incomparable baselines
 # (v3: per-arm acceptance_rate + mean_accepted_tokens, adaptive-K block;
 #  v4: per-arm `metrics` registry snapshot [dvi_serving_*/dvi_train_*],
-#  drift arms carry a per-update `train_timeline`)
-SCHEMA_VERSION = 4
+#  drift arms carry a per-update `train_timeline`;
+#  v5: prefix-cache arms [prefix-cold / prefix-cached] with
+#  dvi_serving_prefix_* counters and a `prefix_cache` summary block)
+SCHEMA_VERSION = 5
+# shared-prefix trace: tenants share a system prompt this long; each
+# request adds a short unique tail (page-aligned-ish so most of the shared
+# prefix is full pages)
+PREFIX_SYS_LEN, PREFIX_TAIL_LEN = 40, 8
 # drift-trace suite: qa traffic shifts to math at batch DRIFT_SHIFT
 DRIFT_PHASE1, DRIFT_PHASE2 = "qa", "math"
 
@@ -120,6 +136,25 @@ def build_mixed_trace(n, rate_hz, tasks, seed=0):
         tp = MIXED_LONG if i % 3 == 0 else MIXED_SHORT
         prompt = tasks.sample(rng.choice(["qa", "math"]), 1, tp,
                               seed=7000 + i)[0]
+        trace.append((float(t[i]), Request(uid=i, prompt=prompt,
+                                           max_new=int(rng.choice(MAX_NEWS)))))
+    return trace
+
+
+def build_prefix_trace(n_tenants, per_tenant, rate_hz, tasks, seed=0):
+    """Poisson arrivals from `n_tenants` tenants: each tenant's requests
+    share a PREFIX_SYS_LEN-token system prompt and differ only in a short
+    unique tail — the workload prefix caching exists for.  Tenants
+    interleave round-robin so the cache serves several chains at once."""
+    rng = np.random.default_rng(seed + 29)
+    n = n_tenants * per_tenant
+    t = np.cumsum(rng.exponential(1.0 / rate_hz, n))
+    sysp = [tasks.sample("qa", 1, PREFIX_SYS_LEN, seed=8000 + k)[0]
+            for k in range(n_tenants)]
+    trace = []
+    for i in range(n):
+        tail = tasks.sample("math", 1, PREFIX_TAIL_LEN, seed=8500 + i)[0]
+        prompt = np.concatenate([sysp[i % n_tenants], tail]).astype(np.int32)
         trace.append((float(t[i]), Request(uid=i, prompt=prompt,
                                            max_new=int(rng.choice(MAX_NEWS)))))
     return trace
@@ -411,6 +446,11 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="add a paged-KV continuous arm (equal token memory, "
                          "2x lanes)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="add a shared-prefix tenant trace: paged+chunked "
+                         "cold vs prefix-cached warm at EQUAL pool size; "
+                         "hard-asserts bit-identical streams and a real "
+                         "prefill saving")
     ap.add_argument("--drift", action="store_true",
                     help="run the drift-trace suite (frozen/online drafter x "
                          "fixed/adaptive K over a topic shift) instead of "
@@ -602,6 +642,96 @@ def main():
                 f"FATAL: telemetry added host syncs on the paged arm "
                 f"(host_syncs={p['dispatch']['host_syncs']}, "
                 f"dispatches={p['dispatch']['dispatches']})")
+
+    # shared-prefix tenant trace: cold (paged + chunked) vs prefix-cached,
+    # SAME trace, SAME pool size — the only difference is the cache.  The
+    # committed streams must be bit-identical (sharing is a memory-layout
+    # choice, never a numerics choice), and the warm arm must either admit
+    # >= 1.5x faster or skip >= 50% of prefill work.
+    if args.prefix_cache:
+        ps = args.kv_page_size
+        tenants, per_tenant = 2, (4 if args.smoke else 8)
+        # one lane per tenant: the first admission wave (one request per
+        # free slot) necessarily runs cold — publishing happens at prefill
+        # completion — so more slots than tenants just manufactures misses
+        # for requests that arrive before the first wave finishes.  Both
+        # arms get the SAME slot count, so the comparison stays fair.
+        pfx_slots = tenants
+        pfx_trace = build_prefix_trace(tenants, per_tenant, rate, tasks,
+                                       seed=args.seed)
+        C = args.prefill_chunk or 8
+        cap_pfx = (PREFIX_SYS_LEN + PREFIX_TAIL_LEN + max(MAX_NEWS)
+                   + cfg.dvi.k_spec + 2 + tfm.RING_SLACK)
+        pfx_pages = pages_for(pfx_slots * cap_pfx, ps) + pfx_slots
+        warm_pfx = [(0.0, Request(
+            uid=10**6 + 80 + j,
+            prompt=tasks.sample("qa", 1, PREFIX_SYS_LEN + PREFIX_TAIL_LEN,
+                                seed=70 + j)[0], max_new=4))
+            for j in range(2)]
+        pkw = {"kv_pages": pfx_pages, "kv_page_size": ps, "sync_every": S,
+               "prefill_chunk": C}
+        cold = run_trace("continuous", model, params, pfx_trace, pfx_slots,
+                         args.batch, warm=warm_pfx, engine_kw=pkw)
+        cached = run_trace("continuous", model, params, pfx_trace, pfx_slots,
+                           args.batch, warm=warm_pfx,
+                           engine_kw={**pkw, "prefix_cache": True})
+        recs.append(report("prefix-cold", *cold))
+        recs.append(report("prefix-cached", *cached))
+        rc, rw = recs[-2], recs[-1]
+        pfx_match = streams(cold[1]) == streams(cached[1])
+        kvw = rw["kv"]
+        # prefill work the cache skipped: hit tokens are spliced from the
+        # pool instead of computed.  Engine-side counters (reset after the
+        # warm-up phase, unlike the pool's own lifetime totals) keep the
+        # measurement exact; pool sized so admission never retries a
+        # blocked lookup.
+        ws = cached[0].stats
+        hits, lookups = ws["prefix_hits"], ws["prefix_lookups"]
+        total_prefill = sum(len(r.prompt) - 1 for _, r in pfx_trace)
+        saved = ws["prefix_hit_tokens"]
+        saved_frac = saved / max(total_prefill, 1)
+        admit_cold = rc["requests"] / max(rc["makespan_s"], 1e-9)
+        admit_warm = rw["requests"] / max(rw["makespan_s"], 1e-9)
+        admit_speedup = admit_warm / max(admit_cold, 1e-9)
+        print(f"# prefix cache ({tenants} tenants x {per_tenant} reqs, "
+              f"sys={PREFIX_SYS_LEN}): admitted/s {admit_cold:.2f} -> "
+              f"{admit_warm:.2f} ({admit_speedup:.2f}x), prefill saved "
+              f"{saved}/{total_prefill} ({saved_frac:.0%}), hits "
+              f"{hits}/{lookups}, cow={ws['prefix_cow_copies']}, "
+              f"tick p95 {rc['tick_p95_ms']:.0f}ms -> "
+              f"{rw['tick_p95_ms']:.0f}ms, streams_match={pfx_match}")
+        summary["prefix_cache"] = {
+            "tenants": tenants, "per_tenant": per_tenant,
+            "pool_pages": pfx_pages, "streams_match": pfx_match,
+            "prefill_tokens_total": total_prefill,
+            "prefill_tokens_saved": saved, "saved_frac": saved_frac,
+            "admitted_per_s_cold": admit_cold,
+            "admitted_per_s_cached": admit_warm,
+            "admit_speedup": admit_speedup,
+            "tick_p50_ms_cold": rc["tick_p50_ms"],
+            "tick_p50_ms_cached": rw["tick_p50_ms"],
+            "tick_p95_ms_cold": rc["tick_p95_ms"],
+            "tick_p95_ms_cached": rw["tick_p95_ms"],
+        }
+        # hard gates: identity first, then the perf claim, then the
+        # leak-free drain epilogue (refcounts back to baseline)
+        if not pfx_match:
+            raise SystemExit("FATAL: prefix-cached streams diverged from "
+                             "cold prefill")
+        if not (admit_speedup >= 1.5 or saved_frac >= 0.5):
+            raise SystemExit(
+                f"FATAL: prefix cache bought neither admission speed "
+                f"(x{admit_speedup:.2f} < 1.5) nor prefill work "
+                f"({saved_frac:.0%} < 50%)")
+        if kvw["used_pages"] != 0 or (kvw["free_pages"] + kvw["cached_pages"]
+                                      != kvw["num_pages"]):
+            raise SystemExit(
+                f"FATAL: pool did not drain to baseline (used="
+                f"{kvw['used_pages']}, free={kvw['free_pages']}, "
+                f"cached={kvw['cached_pages']}, num={kvw['num_pages']})")
+        if hits + ws["prefix_misses"] != lookups:
+            raise SystemExit("FATAL: prefix hit/miss counters do not "
+                             "reconcile with lookups")
 
     if args.json:
         with open(args.json, "w") as f:

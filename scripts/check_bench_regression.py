@@ -11,8 +11,11 @@ against the committed baseline and FAIL (exit 1) when
   pass — the speculative-decoding quality number, hardware-independent)
   regressed more than ``--tolerance`` vs baseline (schema v3+), or
 * any stream-identity check in the run came back false (``streams_match``
-  for the fused arm, and the mixed chunked-prefill arm when present) —
-  losslessness is a correctness property, not a perf number.
+  for the fused arm, the mixed chunked-prefill arm, and the prefix-cached
+  arm when present) — losslessness is a correctness property, not a perf
+  number, or
+* a v5 ``prefix_cache`` block is present but the cache bought neither
+  >=1.5x admitted/s nor >=50% of prefill work skipped.
 
 Also prints a trajectory delta table, appended to ``$GITHUB_STEP_SUMMARY``
 when set so the bench trajectory is readable from the PR checks page.
@@ -84,6 +87,12 @@ def collect_rows(cur: dict, base: dict):
                      pb["tick_p95_ms_chunked"], pc["tick_p95_ms_chunked"],
                      pct(pc["tick_p95_ms_chunked"],
                          pb["tick_p95_ms_chunked"])))
+    xc = cur.get("fused", {}).get("prefix_cache") or {}
+    xb = base.get("fused", {}).get("prefix_cache") or {}
+    for key, label in (("saved_frac", "prefix prefill saved (frac)"),
+                       ("admit_speedup", "prefix admit speedup (x)")):
+        if xc.get(key) and xb.get(key):
+            rows.append((label, xb[key], xc[key], pct(xc[key], xb[key])))
     return rows
 
 
@@ -116,10 +125,12 @@ def main():
         base = json.load(f)
 
     failures = []
-    # v4 only ADDS keys over v3 (per-arm `metrics` snapshot, drift
-    # train_timeline), so a v3 baseline stays comparable with a v4 current —
-    # every key this script reads exists in both
-    compatible = {3, 4}
+    # v4/v5 only ADD keys over v3 (v4: per-arm `metrics` snapshot, drift
+    # train_timeline; v5: prefix-cache arms + `prefix_cache` summary), so
+    # older baselines stay comparable with a newer current — every key this
+    # script reads exists in both, and the v5 prefix gates below only fire
+    # when the current run carries the block
+    compatible = {3, 4, 5}
     sv_cur, sv_base = cur.get("schema_version"), base.get("schema_version")
     if sv_cur not in compatible or sv_base not in compatible:
         raise SystemExit(
@@ -134,6 +145,21 @@ def main():
     if prefill is not None and not prefill.get("streams_match", False):
         failures.append("chunked-prefill arm token streams diverged from "
                         "one-shot prefill (streams_match=false)")
+    # v5 prefix-cache gates: identity is non-negotiable, and the cache must
+    # buy a real saving (admission speed or prefill work) — the same bar
+    # serving_bench hard-asserts, re-checked here so a stale artifact can't
+    # sneak past a locally patched bench
+    pfx = cur.get("fused", {}).get("prefix_cache")
+    if pfx is not None:
+        if not pfx.get("streams_match", False):
+            failures.append("prefix-cached arm token streams diverged from "
+                            "cold prefill (streams_match=false)")
+        if not (pfx.get("admit_speedup", 0) >= 1.5
+                or pfx.get("saved_frac", 0) >= 0.5):
+            failures.append(
+                f"prefix cache bought neither admission speed "
+                f"(x{pfx.get('admit_speedup', 0):.2f} < 1.5) nor prefill "
+                f"work ({pfx.get('saved_frac', 0):.0%} < 50%)")
 
     fc, fb = fused_arm(cur), fused_arm(base)
     regress = (fb["blocks_per_s"] - fc["blocks_per_s"]) / fb["blocks_per_s"]

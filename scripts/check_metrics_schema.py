@@ -18,7 +18,14 @@ broken:
   (integer identities — the histograms are computed inside the fused
   superstep and folded from the SAME device_get as the counters, so any
   drift means the zero-host-sync accounting is wrong, not "sampling
-  noise").
+  noise"),
+* the prefix-cache counters do not reconcile EXACTLY:
+    - ``prefix_hits_total + prefix_misses_total == prefix_lookups_total``
+      (every lookup is classified exactly once),
+    - ``prefix_hit_tokens_total >= prefix_hits_total`` (a hit splices at
+      least one token),
+    - ``prefix_cow_copies_total <= prefix_hits_total`` (copy-on-write
+      only ever rides a hit).
 
 Accepted inputs:
 
@@ -61,12 +68,19 @@ REQUIRED = {
     "dvi_serving_prefill_chunks_total": "counter",
     "dvi_serving_prefill_tokens_total": "counter",
     "dvi_serving_kv_watermark_hits_total": "counter",
+    "dvi_serving_prefix_lookups_total": "counter",
+    "dvi_serving_prefix_hits_total": "counter",
+    "dvi_serving_prefix_misses_total": "counter",
+    "dvi_serving_prefix_hit_tokens_total": "counter",
+    "dvi_serving_prefix_cow_copies_total": "counter",
+    "dvi_serving_prefix_evictions_total": "counter",
     "dvi_serving_peak_live_slots": "gauge",
     "dvi_serving_live_slots": "gauge",
     "dvi_serving_queue_depth": "gauge",
     "dvi_serving_max_tick_prefill_tokens": "gauge",
     "dvi_serving_kv_used_pages": "gauge",
     "dvi_serving_kv_free_pages": "gauge",
+    "dvi_serving_kv_cached_pages": "gauge",
     "dvi_serving_depth_mean": "gauge",
     "dvi_serving_request_latency_seconds": "histogram",
     "dvi_serving_tick_seconds": "histogram",
@@ -158,6 +172,30 @@ def check_snapshot(snap: dict, label: str) -> list:
         if h["sum"] != snap[sum_of]["value"]:
             err(f"{hname}: sum {h['sum']} != "
                 f"{sum_of} {snap[sum_of]['value']}")
+
+    # prefix-cache counter identities (exact — every acquire_prefix call
+    # increments lookups and EXACTLY ONE of hits/misses): hits + misses ==
+    # lookups; a hit splices at least one token (hit_tokens >= hits); a COW
+    # copy only ever rides a hit (cow_copies <= hits)
+    def cval(name):
+        m = snap.get(name)
+        return None if m is None else m.get("value", 0)
+
+    lookups = cval("dvi_serving_prefix_lookups_total")
+    hits = cval("dvi_serving_prefix_hits_total")
+    misses = cval("dvi_serving_prefix_misses_total")
+    hit_toks = cval("dvi_serving_prefix_hit_tokens_total")
+    cows = cval("dvi_serving_prefix_cow_copies_total")
+    if None not in (lookups, hits, misses):
+        if hits + misses != lookups:
+            err(f"prefix counters do not reconcile: hits {hits} + misses "
+                f"{misses} != lookups {lookups}")
+        if hit_toks is not None and hit_toks < hits:
+            err(f"prefix_hit_tokens {hit_toks} < prefix_hits {hits} "
+                f"(every hit splices >= 1 token)")
+        if cows is not None and cows > hits:
+            err(f"prefix_cow_copies {cows} > prefix_hits {hits} "
+                f"(COW only rides a hit)")
     return errs
 
 

@@ -17,6 +17,13 @@ scheduler onto the paged KV pool: admission is gated on free pages instead
 of worst-case slot reservations, and the engine preempts-or-queues when
 the pool runs dry (see repro.serving.kv_pool).
 
+``--prefix-cache`` (paged mode, with ``--prefill-chunk``) shares
+page-aligned prompt prefixes across requests through a content-hash index
+over the pool: repeated system prompts are spliced into a new lane's block
+table by refcount instead of re-prefilled, partially-filled tail pages are
+copied-on-write, and refcount-0 cached pages are evicted LRU only under
+pressure.  Committed streams are bit-identical to cold prefill.
+
 ``--adaptive-k`` turns speculation depth into a per-lane runtime quantity
 steered by each lane's acceptance EMA (see repro.core.schedule): greedy
 token streams are unchanged, but lanes with poor acceptance throttle their
@@ -65,6 +72,13 @@ def main():
                          "interleaved with decode supersteps (bounds "
                          "block-step jitter under long prompts; streams "
                          "stay bit-identical to one-shot prefill)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged mode: content-address page-aligned prompt "
+                         "prefixes so repeated system prompts are spliced "
+                         "from the pool (refcount sharing + copy-on-write "
+                         "tails) instead of re-prefilled; needs --kv-pages "
+                         "and --prefill-chunk (streams stay bit-identical "
+                         "to cold prefill)")
     ap.add_argument("--adaptive-k", action="store_true",
                     help="per-lane acceptance-driven speculation depth: "
                          "each lane's K adapts in [k-min, k-max] from its "
@@ -112,6 +126,7 @@ def main():
                         kv_page_size=args.kv_page_size,
                         sync_every=args.sync_every,
                         prefill_chunk=args.prefill_chunk,
+                        prefix_cache=args.prefix_cache,
                         adaptive_k=args.adaptive_k, k_min=args.k_min,
                         k_max=args.k_max, telemetry=args.telemetry,
                         profile_dir=args.profile_dir)
@@ -152,6 +167,14 @@ def main():
         print(f"[serve] paged KV: peak_util={kv['peak_utilization']:.2f} "
               f"preemptions={kv['preemptions']} "
               f"peak_live={kv['peak_live_slots']}")
+        if args.prefix_cache:
+            print(f"[serve] prefix cache: hits={kv['prefix_hits']}/"
+                  f"{kv['prefix_lookups']} lookups, "
+                  f"tokens_spliced={kv['prefix_hit_tokens']} "
+                  f"cow={eng.stats['prefix_cow_copies']} "
+                  f"evictions={kv['prefix_evictions']} "
+                  f"cached_pages={kv['cached_pages']} "
+                  f"indexed={kv['indexed_pages']}")
     if args.adaptive_k:
         ak = eng.adaptive_stats()
         print(f"[serve] adaptive K in [{ak['k_min']},{ak['k_max']}]: "

@@ -783,8 +783,37 @@ def _insert_paged_seg(cfg: ModelConfig, seg_c: dict, src_c: dict,
     return out
 
 
-def insert_slot(cfg: ModelConfig, cache: dict, src: dict, slot,
-                src_slot: int = 0) -> dict:
+def copy_page(cache: dict, src_page, dst_page) -> dict:
+    """Copy-on-write splice: duplicate physical page `src_page`'s KV (and
+    int8 scales) onto page `dst_page` in every paged full-attention
+    segment, in one device op per leaf.  Used by prefix-cache admission
+    when a cached prompt prefix ends mid-page: the partially-matching
+    cached page is copied into the lane's freshly allocated page, after
+    which the lane appends through its own block table without ever
+    touching the shared original.  Slots past the matched prefix carry
+    donor garbage — overwritten by the consumer's tail prefill before any
+    read, exactly like uninitialized pool slots.  `src_page`/`dst_page`
+    may be traced scalars; pass 0 (the null page) for both to make the
+    whole op a harmless no-op inside a jitted admission function."""
+    segs = {}
+    for name, seg_c in cache["segs"].items():
+        if "kp" not in seg_c:
+            segs[name] = seg_c
+            continue
+        out = dict(seg_c)
+        for key in ("kp", "vp", "ksp", "vsp"):
+            leaf = seg_c.get(key)
+            if leaf is None:
+                continue
+            page = jax.lax.dynamic_slice_in_dim(leaf, src_page, 1, axis=1)
+            out[key] = jax.lax.dynamic_update_slice_in_dim(
+                leaf, page, dst_page, axis=1)
+        segs[name] = out
+    return dict(cache, segs=segs)
+
+
+def insert_slot(cfg: ModelConfig, cache: dict, src: Optional[dict], slot,
+                src_slot: int = 0, shared_len=None) -> dict:
     """Continuous-batching cache surgery: copy sequence lane `src_slot` of
     cache `src` (e.g. a freshly prefilled B=1 contiguous cache) into lane
     `slot` of a live batched cache.  The source may be PARTIALLY BUILT: its
@@ -798,8 +827,30 @@ def insert_slot(cfg: ModelConfig, cache: dict, src: dict, slot,
     full-attention segments instead scatter the source KV through the
     slot's block-table row (map the pages with ``map_slot_pages`` first).
     `slot` may be a traced scalar, so admission jits once per prompt (or
-    chunk) shape."""
+    chunk) shape.
+
+    ``src=None`` (table-splice-without-copy): prefix-cache warm admission.
+    The lane's first `shared_len` logical tokens already live in SHARED
+    physical pages that ``map_slot_pages`` spliced into its block-table
+    row, so the insert is pure bookkeeping — set the lane length to
+    `shared_len` (traced ok) and move NO KV whatsoever; in particular
+    nothing is ever scattered over the shared pages, which other lanes may
+    be reading concurrently.  Only a pure paged full-attention cache
+    qualifies (ring/SSM/RG-LRU segments hold per-lane state that cannot be
+    shared by content)."""
     tbl = cache.get("tbl")
+    if src is None:
+        if shared_len is None:
+            raise ValueError("insert_slot(src=None) needs shared_len")
+        if tbl is None or any("kp" not in c for c in cache["segs"].values()):
+            raise NotImplementedError(
+                "table-splice admission (src=None) requires a pure paged "
+                "full-attention cache — per-lane segment state cannot be "
+                "prefix-shared")
+        ln = jnp.asarray(shared_len, jnp.int32).reshape(1)
+        lengths = jax.lax.dynamic_update_slice_in_dim(
+            cache["lengths"], ln, slot, 0)
+        return dict(cache, lengths=lengths)
     new_segs = {}
     for name, seg_c in cache["segs"].items():
         src_c = src["segs"][name]

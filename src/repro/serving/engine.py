@@ -198,6 +198,7 @@ class ServingEngine:
     kv_pages: int = 0             # >0: paged KV pool with this many pages
     kv_page_size: int = 16        # tokens per page (paged mode)
     kv_watermark: int = 0         # pages kept free at admission (paged mode)
+    prefix_cache: bool = False    # paged: share page-aligned prompt prefixes
     prefill_chunk: int = 0        # >0: prefill in chunks of this many tokens
     adaptive_k: bool = False      # per-lane acceptance-driven depth control
     k_min: int = 1                # adaptive: depth floor
@@ -359,6 +360,26 @@ class ServingEngine:
                     f"{self.kv_watermark} cannot hold one worst-case request "
                     f"({self._mps} pages of {self.kv_page_size}) — admission "
                     f"would livelock")
+        # prefix caching: content-addressed sharing of page-aligned prompt
+        # prefixes.  Requires the paged pool (the sharing substrate), the
+        # chunked-prefill path (uncached TAILS are prefilled at offset
+        # positions inside the live cache — scratch prefill always encodes
+        # RoPE from 0, so it cannot build a tail), and a pure full-attention
+        # stack (ring/SSM/RG-LRU segments hold per-lane state that cannot
+        # be shared by prefix content).
+        if self.prefix_cache:
+            if not self.paged:
+                raise ValueError("prefix_cache requires a paged KV pool "
+                                 "(kv_pages > 0)")
+            if self._chunk <= 0:
+                raise ValueError("prefix_cache requires prefill_chunk > 0 — "
+                                 "uncached prompt tails ride the chunked-"
+                                 "prefill path")
+            bad = [s.kind for s in tfm.model_segments(cfg) if s.kind != "attn"]
+            if bad:
+                raise ValueError(f"prefix_cache requires a pure full-"
+                                 f"attention stack; got segment kinds {bad}")
+        self._evict_seen = 0          # pool eviction counter folded per tick
 
         def admit(params, cache, pending, prompt, slot):
             _, pc, _ = model.prefill(params, prompt[None, :-1], max_len=cap)
@@ -379,6 +400,24 @@ class ServingEngine:
                 pending, prompt[-1:], slot, 0)
             return pending, cache
         self._admit_paged_fn = jax.jit(admit_paged)
+
+        def admit_prefix(cache, pending, slot, row, length, cow_src, cow_dst,
+                         tok, live):
+            # warm admission (prefix-cache hit): the lane's cached prefix is
+            # spliced in via the block TABLE only — zero prefill compute,
+            # zero KV moves for full shared pages.  A partially-matched
+            # cached page is COW-copied into the lane's first writable page
+            # (cow_src == cow_dst == 0 makes that a null-page no-op).
+            # `live`: a fully-cached prompt skips prefill entirely — its
+            # pending token is set here and the lane decodes THIS tick.
+            cache = tfm.copy_page(cache, cow_src, cow_dst)
+            cache = tfm.map_slot_pages(cache, slot, row)
+            cache = tfm.insert_slot(cfg, cache, None, slot, shared_len=length)
+            cur = jax.lax.dynamic_slice_in_dim(pending, slot, 1, 0)
+            pending = jax.lax.dynamic_update_slice_in_dim(
+                pending, jnp.where(live, tok, cur[0])[None], slot, 0)
+            return pending, cache
+        self._admit_prefix_fn = jax.jit(admit_prefix)
 
         def admit_chunk(params, cache, chunk, slot):
             # chunked admission (contiguous): prefill ONLY the first chunk
@@ -674,7 +713,58 @@ class ServingEngine:
                     self.num_slots, self.kv_pages, self.kv_page_size,
                     self._mps) if self.paged
                     else self.model.init_cache(self.num_slots, self._cap))
-            if self.paged:
+            hit = None
+            if self.paged and self.prefix_cache:
+                # longest cached prefix of the prompt (the pending token is
+                # never cached).  Counted per LOOKUP — a watermark-blocked
+                # admission retried next tick counts again, by design.
+                hit = self._pool.acquire_prefix(req.uid, prompt[:-1])
+                self.stats["prefix_lookups"] += 1
+                if hit.hit_tokens > 0:
+                    self.stats["prefix_hits"] += 1
+                    self.stats["prefix_hit_tokens"] += hit.hit_tokens
+                else:
+                    self.stats["prefix_misses"] += 1
+            if hit is not None and hit.hit_tokens > 0:
+                # ---- warm admission: splice shared pages, prefill only the
+                # uncached tail.  `warm` tokens are already resident (full
+                # shared pages + a COW-copied partial page); the tail rides
+                # the chunked-prefill path from position `warm`.
+                warm = hit.hit_tokens
+                tail = len(prompt) - 1 - warm
+                need = (self._pool.pages_for(warm + min(self._chunk, tail))
+                        if tail > 0
+                        else self._pages_needed(len(prompt) - 1,
+                                                max_new - gen_carry))
+                if not self._pool.can_alloc(need - len(hit.pages),
+                                            self.kv_watermark + reserve):
+                    if hit.pages:            # put the shared pages back
+                        self._pool.free(req.uid)
+                    self.telem.c_watermark.inc()
+                    if tr is not None:
+                        tr.instant(self.telem.tid_engine, "pool_watermark",
+                                   args={"uid": req.uid, "need": need,
+                                         "free": self._pool.available_pages,
+                                         "reserve": reserve})
+                    break
+                self._fifo.popleft()
+                fresh = self._pool.ensure(req.uid, need) or []
+                cow_dst = fresh[0] if hit.cow_tokens else 0
+                if hit.cow_tokens:
+                    self.stats["prefix_cow_copies"] += 1
+                owned = self._pool.owned(req.uid)
+                row = np.full(self._mps, -1, np.int32)
+                row[:len(owned)] = owned
+                self._tbl_host[slot] = row
+                self._pending, self._cache = self._admit_prefix_fn(
+                    self._cache, self._pending, jnp.int32(slot),
+                    jnp.asarray(row), jnp.int32(warm),
+                    jnp.int32(hit.cow_page), jnp.int32(cow_dst),
+                    jnp.asarray(prompt[-1]), jnp.asarray(tail == 0))
+                c1, chunked = warm, tail > 0
+                if not chunked:   # fully cached: nothing new to publish
+                    self._pool.publish_prefix(req.uid, prompt[:-1])
+            elif self.paged:
                 # mid-prefill lanes only hold pages for what is actually
                 # cached so far; the rest is provisioned chunk-by-chunk by
                 # _advance_prefill (growth-class: like decode page growth
@@ -702,6 +792,10 @@ class ServingEngine:
                     self.params, self._cache, self._pending,
                     jnp.asarray(prompt[:c1 + 1]), jnp.int32(slot),
                     jnp.asarray(row))
+                # one-shot cold admission caches the whole prompt prefix in
+                # one go — publish it for the next tenant immediately
+                if self.prefix_cache and not chunked:
+                    self._pool.publish_prefix(req.uid, prompt[:-1])
             else:
                 self._fifo.popleft()
                 if chunked:
@@ -907,7 +1001,7 @@ class ServingEngine:
         if dirty:
             self._cache = self._set_tbl_fn(self._cache,
                                            jnp.asarray(self._tbl_host))
-        if not take.any():
+        if not take.any() and not finished.any():
             return
         t_c0 = self.clock()
         self._pending, self._cache = self._chunk_fn(
@@ -922,7 +1016,7 @@ class ServingEngine:
         tr = self.telem.tracer
         for s in lanes:
             st = self._slots[s]
-            if st is None or not take[s]:
+            if st is None or (not take[s] and not finished[s]):
                 continue
             st.pf_pos += int(take[s])
             st.cache_len += int(take[s])
@@ -931,6 +1025,10 @@ class ServingEngine:
                         args={"uid": st.uid, "tokens": int(take[s]),
                               "pos": int(st.pf_pos)})
             if finished[s]:
+                # the whole prompt prefix is committed in-cache now — make
+                # it hittable for the next tenant sharing it
+                if self.paged and self.prefix_cache:
+                    self._pool.publish_prefix(st.uid, st.pf_prompt[:-1])
                 st.pf_pos = None
                 st.pf_prompt = None
                 self._done[s] = False
@@ -1232,8 +1330,15 @@ class ServingEngine:
             t.g_live.set(self.active_slots)
             t.g_queue.set(len(self._fifo))
             if self.paged:
+                # free counts evictable cached pages — what admission may
+                # actually use; g_kv_cached breaks out the warm subset
                 t.g_kv_used.set(self._pool.used_pages)
-                t.g_kv_free.set(self._pool.free_pages)
+                t.g_kv_free.set(self._pool.available_pages)
+                t.g_kv_cached.set(self._pool.cached_pages)
+                ev = self._pool.evictions
+                if ev != self._evict_seen:
+                    self.stats["prefix_evictions"] += ev - self._evict_seen
+                    self._evict_seen = ev
             if tr is not None:
                 tr.span(tid_e, "tick", tick0, tick0 + dt,
                         args={"live": self.active_slots,

@@ -47,12 +47,22 @@ dvi_serving_dispatches_total                   counter    superstep dispatches
 dvi_serving_prefill_chunks_total               counter    batched prefill chunk steps
 dvi_serving_prefill_tokens_total               counter    prompt tokens prefilled via chunks
 dvi_serving_kv_watermark_hits_total            counter    admissions blocked on pool headroom
+dvi_serving_prefix_lookups_total               counter    prefix-cache admission lookups
+dvi_serving_prefix_hits_total                  counter    lookups matching >=1 cached token
+dvi_serving_prefix_misses_total                counter    lookups matching nothing
+                                                          (hits + misses == lookups, EXACT)
+dvi_serving_prefix_hit_tokens_total            counter    prompt tokens skipped via cached
+                                                          prefixes (>= hits when hits > 0)
+dvi_serving_prefix_cow_copies_total            counter    copy-on-write page copies performed
+                                                          at warm admission (<= hits)
+dvi_serving_prefix_evictions_total             counter    cached pages lazily reclaimed (LRU)
 dvi_serving_peak_live_slots                    gauge      high-water concurrent lanes
 dvi_serving_live_slots                         gauge      currently occupied lanes
 dvi_serving_queue_depth                        gauge      requests waiting for a lane
 dvi_serving_max_tick_prefill_tokens            gauge      largest single-tick prefill budget
-dvi_serving_kv_used_pages                      gauge      pool pages in use (paged mode)
-dvi_serving_kv_free_pages                      gauge      pool pages free (paged mode)
+dvi_serving_kv_used_pages                      gauge      pool pages live (refcount > 0)
+dvi_serving_kv_free_pages                      gauge      pool pages free + evictable cached
+dvi_serving_kv_cached_pages                    gauge      evictable prefix-cached pages
 dvi_serving_depth_mean                         gauge      mean live-lane speculation depth
 dvi_serving_request_latency_seconds            histogram  submit -> completion (log buckets)
 dvi_serving_tick_seconds                       histogram  engine tick wall time (log buckets)
@@ -575,6 +585,18 @@ LEGACY_STATS = {
                        "batched prefill chunk steps"),
     "prefill_tokens": ("dvi_serving_prefill_tokens_total", "counter",
                        "prompt tokens prefilled via chunk steps"),
+    "prefix_lookups": ("dvi_serving_prefix_lookups_total", "counter",
+                       "prefix-cache admission lookups"),
+    "prefix_hits": ("dvi_serving_prefix_hits_total", "counter",
+                    "prefix lookups matching >=1 cached token"),
+    "prefix_misses": ("dvi_serving_prefix_misses_total", "counter",
+                      "prefix lookups matching nothing"),
+    "prefix_hit_tokens": ("dvi_serving_prefix_hit_tokens_total", "counter",
+                          "prompt tokens skipped via cached prefixes"),
+    "prefix_cow_copies": ("dvi_serving_prefix_cow_copies_total", "counter",
+                          "copy-on-write page copies at warm admission"),
+    "prefix_evictions": ("dvi_serving_prefix_evictions_total", "counter",
+                         "prefix-cached pages lazily reclaimed (LRU)"),
     "peak_live_slots": ("dvi_serving_peak_live_slots", "gauge",
                         "high-water concurrent live lanes"),
     "max_tick_prefill_tokens": ("dvi_serving_max_tick_prefill_tokens",
@@ -637,9 +659,11 @@ class ServingTelemetry:
         self.g_queue = reg.gauge("dvi_serving_queue_depth",
                                  "requests waiting for a lane")
         self.g_kv_used = reg.gauge("dvi_serving_kv_used_pages",
-                                   "pool pages in use")
+                                   "pool pages live (refcount > 0)")
         self.g_kv_free = reg.gauge("dvi_serving_kv_free_pages",
-                                   "pool pages free")
+                                   "pool pages free or evictable")
+        self.g_kv_cached = reg.gauge("dvi_serving_kv_cached_pages",
+                                     "evictable prefix-cached pages")
         self.g_depth_mean = reg.gauge(
             "dvi_serving_depth_mean", "mean live-lane speculation depth")
 

@@ -1,0 +1,384 @@
+"""Prefix caching / copy-on-write page sharing: (1) the pool's refcount +
+content-index + LRU-eviction invariants hold under random interleavings of
+acquire/publish/alloc/free; (2) watermark math counts evictable pages as
+headroom and reclaims them lazily; (3) splicing shared prefix pages into a
+lane produces BIT-IDENTICAL committed streams to cold prefill — greedy and
+rejection-sampled alike — at the spec level and through the full engine,
+including the COW partial-page path and preemption under page scarcity;
+(4) refcounts return to baseline after drain (no leak, no stuck page)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import tiny_cfg
+from repro.core import lora, online, spec
+from repro.models.model import build_model
+import repro.models.transformer as tfm
+from repro.serving import Request, ServingEngine
+from repro.serving.kv_pool import KVPool, pages_for
+
+
+# ---------------------------------------------------------------------------
+# 1) pool unit + property tests
+# ---------------------------------------------------------------------------
+
+def test_prefix_pool_roundtrip():
+    """publish -> acquire shares full pages by refcount and offers the
+    trailing partial page as a COW source; release parks published pages as
+    evictable; re-acquire revives them; eviction drops the index."""
+    pool = KVPool(num_pages=8, page_size=4)
+    prompt = list(range(10, 20))                     # 2 full pages + 2 tail
+    pool.alloc(pages_for(len(prompt), 4), owner=1)
+    assert pool.publish_prefix(1, prompt) == 3       # 2 full + 1 partial
+    p1 = pool.owned(1)
+
+    hit = pool.acquire_prefix(2, prompt)
+    assert list(hit.pages) == p1[:2] and hit.tokens == 8
+    assert hit.cow_page == p1[2] and hit.cow_tokens == 2
+    assert hit.hit_tokens == 10
+    assert pool.owned(2) == p1[:2]
+    assert pool.refcount(p1[0]) == 2 and pool.refcount(p1[2]) == 1
+
+    # shorter probe: only the first full page matches
+    short = pool.acquire_prefix(3, prompt[:4])
+    assert list(short.pages) == p1[:1] and short.cow_tokens == 0
+    pool.free(3)
+
+    # donor retires: shared pages stay live, the partial parks as cached
+    pool.free(1)
+    assert pool.refcount(p1[0]) == 1 and pool.refcount(p1[2]) == 0
+    assert pool.cached_pages == 1 and pool.used_pages == 2
+    pool.free(2)
+    assert pool.used_pages == 0 and pool.cached_pages == 3
+    assert pool.available_pages == pool.num_pages
+
+    # revive from cached, then force eviction of everything
+    again = pool.acquire_prefix(4, prompt)
+    assert again.hit_tokens == 10 and pool.used_pages == 2
+    pool.free(4)
+    assert pool.alloc(pool.num_pages, owner=5) is not None
+    assert pool.evictions == 3 and pool.cached_pages == 0
+    miss = pool.acquire_prefix(6, prompt)
+    assert miss.hit_tokens == 0 and pool.prefix_misses == 1
+
+
+def test_prefix_pool_eviction_invalidates_subtree():
+    """Evicting a chain's root must drop every descendant key: a recycled
+    page id republished at another depth would otherwise make stale child
+    keys hittable with KV from a different prefix/position."""
+    pool = KVPool(num_pages=4, page_size=2)
+    prompt = [7, 8, 9, 10, 11, 12]                   # 3 full pages
+    pool.alloc(3, owner=1)
+    pool.publish_prefix(1, prompt)
+    pool.free(1)
+    assert pool.cached_pages == 3
+    pool._evict_one()                                # root leaves the index
+    assert pool.evictions == 1
+    hit = pool.acquire_prefix(2, prompt)
+    assert hit.hit_tokens == 0, "descendant keys must die with their root"
+    assert pool.utilization()["indexed_pages"] == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 999), min_size=1, max_size=80))
+def test_prefix_pool_invariants_under_sharing(ops_seq):
+    """Random acquire_prefix/publish/alloc/free interleavings over a tiny
+    token alphabet (maximal sharing pressure): conservation, refcount ==
+    number of owners mapping the page, indexed pages never free, all-or-
+    nothing grants — after EVERY operation."""
+    N = 13
+    pool = KVPool(num_pages=N, page_size=4)
+    prompts = {}                                     # uid -> token list
+    next_uid = 0
+    for op in ops_seq:
+        kind = op % 4
+        if kind == 0 and prompts:                    # retire a random owner
+            uid = list(prompts)[op % len(prompts)]
+            del prompts[uid]
+            if pool.owned(uid):
+                pool.free(uid)
+                with pytest.raises(KeyError):
+                    pool.free(uid)
+        elif kind == 1 and prompts:                  # publish a random owner
+            uid = list(prompts)[op % len(prompts)]
+            pool.publish_prefix(uid, prompts[uid])
+        else:                                        # admit: acquire + ensure
+            L = (op // 7) % 11 + 1
+            prompt = [(op + 3 * j) % 3 for j in range(L)]
+            uid = next_uid
+            next_uid += 1
+            hit = pool.acquire_prefix(uid, prompt)
+            assert hit.tokens == len(hit.pages) * 4
+            assert hit.cow_tokens < 4
+            got = pool.ensure(uid, pool.pages_for(len(prompt)))
+            if got is None:                          # admission rollback
+                if pool.owned(uid):
+                    pool.free(uid)
+            else:
+                prompts[uid] = prompt
+
+        # invariants after EVERY op
+        holders = {}
+        for uid in pool.owners():
+            pages = pool.owned(uid)
+            assert len(pages) == len(set(pages)), "page twice in one lane"
+            for p in pages:
+                holders[p] = holders.get(p, 0) + 1
+        for p, n in holders.items():
+            assert pool.refcount(p) == n, "refcount != number of holders"
+            assert 1 <= p <= N
+        live = len(holders)
+        assert pool.used_pages == live
+        assert pool.free_pages + pool.cached_pages + live == N, "leak"
+        assert pool.available_pages == pool.free_pages + pool.cached_pages
+        for page in list(pool._page_key):
+            assert page not in pool._free_set, "indexed page on free list"
+        assert pool.prefix_hits + pool.prefix_misses == pool.prefix_lookups
+
+
+def test_prefix_pool_watermark_edges_with_evictable_headroom():
+    """can_alloc/ensure count evictable cached pages as free headroom, and
+    alloc reclaims them lazily (oldest first) only when strictly-free pages
+    cannot cover the grant."""
+    pool = KVPool(num_pages=6, page_size=4)
+    pool.alloc(4, owner=1)
+    pool.publish_prefix(1, list(range(16)))          # 4 full pages
+    pool.free(1)
+    assert pool.free_pages == 2 and pool.cached_pages == 4
+    assert pool.can_alloc(6) and not pool.can_alloc(6, watermark=1)
+    assert pool.can_alloc(5, watermark=1)
+    got = pool.ensure(2, 3)                          # 2 free + 1 eviction
+    assert got is not None and len(got) == 3
+    assert pool.evictions == 1 and pool.cached_pages == 3
+    # the evicted page was the LRU root -> whole chain left the index
+    assert pool.acquire_prefix(3, list(range(16))).hit_tokens == 0
+    assert pool.ensure(2, 3) == []                   # already provisioned
+    assert pool.ensure(2, 10) is None, "beyond free+cached must fail"
+    assert pool.failed_allocs == 1
+
+
+# ---------------------------------------------------------------------------
+# 2) spec-level: shared prefix pages == cold prefill, greedy + sampled
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_shared_pages_match_cold_stream(temperature):
+    """Two lanes with an identical page-aligned prompt: run A with both
+    lanes cold-prefilled, run B with lane 1 splicing lane 0's prefix pages
+    (table splice, no copy).  Same PRNG keys => accept counts and committed
+    tokens must be bit-identical — under greedy decoding AND Leviathan
+    rejection sampling."""
+    cfg = tiny_cfg("vicuna-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dvi = lora.init_draft_params(jax.random.PRNGKey(5), cfg)
+    K = cfg.dvi.k_spec
+    B, Tp, ps, mps = 2, 9, 4, 16                     # prompt[:-1] = 2 pages
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (Tp,), 2,
+                                cfg.vocab_size)
+    prompts = jnp.tile(prompt[None, :], (B, 1))
+
+    def grow(cache, pool, lens):
+        for b in range(B):
+            need = pages_for(lens[b], ps)
+            if need > len(pool.owned(b)):
+                assert pool.ensure(b, need) is not None
+                row = np.full(mps, -1, np.int32)
+                owned = pool.owned(b)
+                row[:len(owned)] = owned
+                cache = tfm.map_slot_pages(cache, jnp.int32(b),
+                                           jnp.asarray(row))
+        return cache
+
+    def setup(shared):
+        pool = KVPool(num_pages=2 * mps, page_size=ps)
+        cache = model.init_paged_cache(B, pool.num_pages, ps, mps)
+        cache = grow(cache, pool, [Tp - 1 + K + 2] * B)
+        _, pc, _ = model.prefill(params, prompts[:1, :-1], max_len=Tp - 1)
+        cache = tfm.insert_slot(cfg, cache, pc, jnp.int32(0))
+        if shared:
+            # lane 1 = lane 0's prefix pages + its own pages for the tail
+            pool.free(1)
+            pool.publish_prefix(0, [int(t) for t in prompt[:-1]])
+            hit = pool.acquire_prefix(1, [int(t) for t in prompt[:-1]])
+            assert hit.tokens == Tp - 1 and hit.cow_tokens == 0
+            assert pool.ensure(1, pages_for(Tp - 1 + K + 2, ps)) is not None
+            row = np.full(mps, -1, np.int32)
+            owned = pool.owned(1)
+            row[:len(owned)] = owned
+            assert owned[:2] == pool.owned(0)[:2], "pages not shared"
+            cache = tfm.map_slot_pages(cache, jnp.int32(1), jnp.asarray(row))
+            cache = tfm.insert_slot(cfg, cache, None, jnp.int32(1),
+                                    shared_len=Tp - 1)
+        else:
+            _, pc, _ = model.prefill(params, prompts[1:, :-1], max_len=Tp - 1)
+            cache = tfm.insert_slot(cfg, cache, pc, jnp.int32(1))
+        return pool, cache
+
+    streams = {}
+    for shared in (False, True):
+        pool, cache = setup(shared)
+        pending = prompts[:, -1]
+        key = jax.random.PRNGKey(42)
+        lens, out = [Tp - 1] * B, [[], []]
+        for _ in range(5):
+            cache = grow(cache, pool, [t + K + 2 for t in lens])
+            blk = spec.spec_block_step(model, params, dvi, pending, cache,
+                                       temperature=temperature, key=key)
+            pending, cache, key = blk.pending, blk.cache, blk.key
+            for b in range(B):
+                out[b] += np.asarray(
+                    blk.commit_vec[b, :int(blk.accept[b])]).tolist()
+            lens = [t + int(blk.accept[b]) for b, t in enumerate(lens)]
+        streams[shared] = out
+    assert streams[True] == streams[False], (
+        f"sharing changed the committed stream (temperature={temperature})")
+
+
+def test_insert_slot_table_splice_requires_paged():
+    cfg = tiny_cfg("vicuna-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    _, cache, _ = model.prefill(params, jnp.ones((2, 6), jnp.int32),
+                                max_len=16)
+    with pytest.raises(NotImplementedError):
+        tfm.insert_slot(cfg, cache, None, jnp.int32(0), shared_len=4)
+    with pytest.raises(ValueError):
+        paged = model.init_paged_cache(2, 8, 4, 4)
+        tfm.insert_slot(cfg, paged, None, jnp.int32(0))
+
+
+# ---------------------------------------------------------------------------
+# 3) engine end-to-end: warm == cold, COW, preemption, leak-free drain
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def backbone():
+    cfg = tiny_cfg("vicuna-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _shared_prefix_requests(cfg, n, sys_len=10, seed=7):
+    """n requests from 2 tenants: each tenant's requests share a system
+    prompt of `sys_len` tokens followed by a short unique tail."""
+    rng = np.random.default_rng(seed)
+    tenants = [rng.integers(2, cfg.vocab_size, sys_len).astype(np.int32)
+               for _ in range(2)]
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(2, cfg.vocab_size, 3 + i % 3).astype(np.int32)
+        reqs.append(Request(uid=i, prompt=np.concatenate(
+            [tenants[i % 2], tail]), max_new=8))
+    return reqs
+
+
+def _run_engine(model, params, reqs, **kw):
+    state = online.init_trainer(model, jax.random.PRNGKey(3))
+    eng = ServingEngine(model, params, state, scheduler="continuous", **kw)
+    for r in reqs:
+        eng.submit(r)
+    outs = eng.run(max_steps=3000)
+    assert len(outs) == len(reqs) and not eng.busy
+    return eng, {o.uid: o.gen_tokens.tolist() for o in outs}
+
+
+def test_engine_prefix_cache_lossless(backbone):
+    """Multi-tenant shared system prompts through the full engine: the warm
+    run must emit byte-identical streams to the cold run, save real prefill
+    work, and drain leak-free (every refcount back to baseline)."""
+    cfg, model, params = backbone
+    reqs = _shared_prefix_requests(cfg, 8)
+    kw = dict(num_slots=3, max_new=8, cache_len=40, kv_pages=30,
+              kv_page_size=4, prefill_chunk=4)
+    eng_c, out_c = _run_engine(model, params, reqs, **kw)
+    eng_w, out_w = _run_engine(model, params, reqs, prefix_cache=True, **kw)
+    assert out_w == out_c, "prefix cache changed a committed stream"
+
+    kv = eng_w.kv_stats()
+    assert kv["prefix_hits"] > 0 and kv["prefix_hit_tokens"] > 0
+    assert kv["prefix_hits"] + kv["prefix_misses"] == kv["prefix_lookups"]
+    # hit tokens are never prefilled: chunked-prefill work must shrink
+    assert eng_w.stats["prefill_tokens"] < eng_c.stats["prefill_tokens"]
+    assert kv["prefix_hit_tokens"] >= kv["prefix_hits"]
+    # leak-free drain: nothing live, every page free or evictable-cached
+    assert kv["used_pages"] == 0
+    assert kv["free_pages"] + kv["cached_pages"] == kv["num_pages"]
+    assert eng_c.stats["prefix_lookups"] == 0, "cold run must not probe"
+
+
+def test_engine_prefix_cow_path(backbone):
+    """A short-tail request publishes a PARTIAL page; the next request with
+    a longer tail must COW it (cow_copies >= 1) and still match cold."""
+    cfg, model, params = backbone
+    rng = np.random.default_rng(11)
+    sysp = rng.integers(2, cfg.vocab_size, 10).astype(np.int32)
+    first = Request(uid=0, prompt=np.concatenate(
+        [sysp, rng.integers(2, cfg.vocab_size, 1).astype(np.int32)]),
+        max_new=6)                                   # prompt[:-1] = 10 toks
+    second = Request(uid=1, prompt=np.concatenate(
+        [sysp, rng.integers(2, cfg.vocab_size, 4).astype(np.int32)]),
+        max_new=6)
+    kw = dict(num_slots=2, max_new=6, cache_len=40, kv_pages=24,
+              kv_page_size=4, prefill_chunk=4)
+
+    def run(**extra):
+        state = online.init_trainer(model, jax.random.PRNGKey(3))
+        eng = ServingEngine(model, params, state, scheduler="continuous",
+                            **kw, **extra)
+        eng.submit(first)
+        outs = eng.run(max_steps=1000)               # donor fully retires,
+        eng.submit(second)                           # THEN the COW consumer
+        outs += eng.run(max_steps=1000)
+        assert len(outs) == 2 and not eng.busy
+        return eng, {o.uid: o.gen_tokens.tolist() for o in outs}
+
+    eng_c, out_c = run()
+    eng_w, out_w = run(prefix_cache=True)
+    assert out_w == out_c, "COW path changed a committed stream"
+    assert eng_w.stats["prefix_cow_copies"] >= 1, "partial hit never COWed"
+    kv = eng_w.kv_stats()
+    assert kv["prefix_hit_tokens"] >= 10            # 2 full pages + 2 COW
+    assert kv["used_pages"] == 0
+
+
+def test_engine_prefix_cache_preemption_lossless(backbone):
+    """Pool tight enough to force preemption while prefixes are shared:
+    replayed lanes re-acquire warm and every stream still equals the
+    greedy AR reference; refcounts return to baseline after drain."""
+    cfg, model, params = backbone
+    reqs = _shared_prefix_requests(cfg, 6, sys_len=8, seed=5)
+    eng, out = _run_engine(model, params, reqs, num_slots=3, max_new=8,
+                           cache_len=40, kv_pages=14, kv_page_size=4,
+                           prefill_chunk=4, prefix_cache=True)
+    for req in reqs:
+        r = spec.ar_generate(model, params, jnp.asarray(req.prompt)[None, :],
+                             req.max_new)
+        gen = np.asarray(
+            r.tokens[0, len(req.prompt):int(r.lengths[0])]).tolist()
+        ref = []
+        for t in gen[:req.max_new]:
+            ref.append(int(t))
+            if t == 1:
+                break
+        assert out[req.uid] == ref, f"uid {req.uid}: {out[req.uid]} != {ref}"
+    kv = eng.kv_stats()
+    assert kv["preemptions"] > 0, "pool not tight enough to preempt"
+    assert kv["used_pages"] == 0
+    assert kv["free_pages"] + kv["cached_pages"] == kv["num_pages"]
+
+
+def test_engine_prefix_cache_rejects_bad_config(backbone):
+    cfg, model, params = backbone
+    state = online.init_trainer(model, jax.random.PRNGKey(3))
+    with pytest.raises(ValueError):                  # needs a paged pool
+        ServingEngine(model, params, state, scheduler="continuous",
+                      cache_len=40, prefix_cache=True)
+    with pytest.raises(ValueError):                  # needs chunked prefill
+        ServingEngine(model, params, state, scheduler="continuous",
+                      cache_len=40, kv_pages=20, kv_page_size=4,
+                      prefix_cache=True)
