@@ -177,7 +177,7 @@ def run_trace(scheduler, model, params, trace, num_slots, batch_size,
     # warm THIS engine's jit caches (they live in the engine instance) so the
     # timed run below pays no XLA compilation
     for _, wreq in warm:
-        eng.submit(wreq)
+        eng.submit_request(wreq)
     eng.run()
     eng.reset_stats()
     done = []
@@ -187,7 +187,7 @@ def run_trace(scheduler, model, params, trace, num_slots, batch_size,
     while i < len(trace) or eng.busy:
         now = time.perf_counter() - t0
         while i < len(trace) and trace[i][0] <= now:
-            eng.submit(trace[i][1])
+            eng.submit_request(trace[i][1])
             i += 1
         if not eng.busy:
             if i < len(trace):                 # idle until the next arrival
@@ -299,9 +299,11 @@ def run_drift_arm(model, params, tasks, warm_state, *, learn, adaptive,
     # drops — that lands in the at-shift window, which is why blocks/s
     # comparisons read the post-shift window)
     for j in range(batch):
-        eng.submit(Request(uid=10**7 + j,
-                           prompt=tasks.sample(DRIFT_PHASE1, 1, prompt_len,
-                                               seed=90 + j)[0], max_new=4))
+        eng.submit_request(Request(uid=10**7 + j,
+                                   prompt=tasks.sample(DRIFT_PHASE1, 1,
+                                                       prompt_len,
+                                                       seed=90 + j)[0],
+                                   max_new=4))
     eng.run()
     eng.reset_stats()
     rows, done, uid = [], [], 0
@@ -309,10 +311,10 @@ def run_drift_arm(model, params, tasks, warm_state, *, learn, adaptive,
     for b in range(n_batches):
         cat = DRIFT_PHASE1 if b < shift_at else DRIFT_PHASE2
         for _ in range(batch):
-            eng.submit(Request(uid=uid,
-                               prompt=tasks.sample(cat, 1, prompt_len,
-                                                   seed=uid)[0],
-                               max_new=max_new))
+            eng.submit_request(Request(uid=uid,
+                                       prompt=tasks.sample(cat, 1, prompt_len,
+                                                           seed=uid)[0],
+                                       max_new=max_new))
             uid += 1
         before = {k: eng.stats[k] for k in keys}
         t0 = time.perf_counter()

@@ -57,10 +57,10 @@ def run(learn: bool, model, params, tasks, warm_state):
     for b in range(N_BATCHES):
         cat = PHASE1 if b < SHIFT_AT else PHASE2
         for _ in range(BATCH):
-            eng.submit(Request(uid=uid,
-                               prompt=tasks.sample(cat, 1, PROMPT_LEN,
-                                                   seed=uid)[0],
-                               max_new=MAX_NEW))
+            eng.submit_request(Request(uid=uid,
+                                       prompt=tasks.sample(cat, 1, PROMPT_LEN,
+                                                           seed=uid)[0],
+                                       max_new=MAX_NEW))
             uid += 1
         before = (eng.stats["accepted"], eng.stats["drafted"],
                   eng.stats["blocks"])

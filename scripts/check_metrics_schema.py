@@ -25,7 +25,15 @@ broken:
     - ``prefix_hit_tokens_total >= prefix_hits_total`` (a hit splices at
       least one token),
     - ``prefix_cow_copies_total <= prefix_hits_total`` (copy-on-write
-      only ever rides a hit).
+      only ever rides a hit),
+* the request-lifecycle counters do not reconcile EXACTLY (artifacts are
+  written AFTER the engine drains, so no request may be unaccounted):
+    - ``submitted_total == requests_total + cancelled_total +
+      rejected_total + queue_depth + live_slots`` (every submission ends
+      completed, cancelled, or rejected once the engine is idle),
+    - the per-tenant label values of ``requests_by_tenant`` sum to
+      ``submitted_total`` (every submission is attributed to exactly one
+      tenant, including rejected ones).
 
 Accepted inputs:
 
@@ -56,6 +64,10 @@ from repro.serving.telemetry import parse_prometheus_text  # noqa: E402
 # full schema up front so dashboards never see keys flicker in and out
 REQUIRED = {
     "dvi_serving_requests_total": "counter",
+    "dvi_serving_submitted_total": "counter",
+    "dvi_serving_cancelled_total": "counter",
+    "dvi_serving_rejected_total": "counter",
+    "dvi_serving_requests_by_tenant": "counter",
     "dvi_serving_blocks_total": "counter",
     "dvi_serving_steps_total": "counter",
     "dvi_serving_committed_tokens_total": "counter",
@@ -83,6 +95,8 @@ REQUIRED = {
     "dvi_serving_kv_cached_pages": "gauge",
     "dvi_serving_depth_mean": "gauge",
     "dvi_serving_request_latency_seconds": "histogram",
+    "dvi_serving_queue_wait_seconds": "histogram",
+    "dvi_serving_ttft_seconds": "histogram",
     "dvi_serving_tick_seconds": "histogram",
     "dvi_serving_sync_wait_seconds": "histogram",
     "dvi_serving_block_accepted_drafts": "histogram",
@@ -135,6 +149,13 @@ def check_snapshot(snap: dict, label: str) -> list:
         if kind == "counter":
             if m.get("value", 0) < 0:
                 err(f"{name}: negative counter value {m['value']}")
+            vals = m.get("values")
+            if vals is not None:
+                if any(v < 0 for v in vals.values()):
+                    err(f"{name}: negative labeled counter value {vals}")
+                if sum(vals.values()) != m.get("value", 0):
+                    err(f"{name}: label values sum {sum(vals.values())} "
+                        f"!= total {m.get('value', 0)}")
         elif kind == "histogram":
             buckets = m.get("buckets", [])
             if not buckets:
@@ -196,6 +217,30 @@ def check_snapshot(snap: dict, label: str) -> list:
         if cows is not None and cows > hits:
             err(f"prefix_cow_copies {cows} > prefix_hits {hits} "
                 f"(COW only rides a hit)")
+
+    # request-lifecycle reconciliation: artifacts are written after the
+    # engine drains, so every submission must be accounted for — completed
+    # (requests_total), cancelled, rejected, or still parked in the queue /
+    # a live lane (both zero when drained; kept in the identity so the
+    # check is also meaningful on mid-run snapshots)
+    submitted = cval("dvi_serving_submitted_total")
+    completed = cval("dvi_serving_requests_total")
+    cancelled = cval("dvi_serving_cancelled_total")
+    rejected = cval("dvi_serving_rejected_total")
+    qdepth = (snap.get("dvi_serving_queue_depth") or {}).get("value")
+    live = (snap.get("dvi_serving_live_slots") or {}).get("value")
+    if None not in (submitted, completed, cancelled, rejected, qdepth, live):
+        accounted = completed + cancelled + rejected + qdepth + live
+        if submitted != accounted:
+            err(f"lifecycle counters do not reconcile: submitted "
+                f"{submitted} != completed {completed} + cancelled "
+                f"{cancelled} + rejected {rejected} + queue_depth "
+                f"{qdepth} + live_slots {live} = {accounted}")
+        tenants = (snap.get("dvi_serving_requests_by_tenant") or
+                   {}).get("values")
+        if tenants is not None and sum(tenants.values()) != submitted:
+            err(f"requests_by_tenant values {tenants} sum to "
+                f"{sum(tenants.values())} != submitted_total {submitted}")
     return errs
 
 

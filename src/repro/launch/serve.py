@@ -4,31 +4,16 @@ Streams synthetic requests (optionally with a mid-run task-distribution
 shift) through the ServingEngine and reports acceptance / MAT / latency —
 the paper's deployment story end-to-end on CPU with a tiny backbone.
 
-Two schedulers (``--scheduler``):
+Engine knobs (scheduler, slots, paged KV, prefix cache, adaptive K,
+telemetry, ...) come from the shared ``serving.config.EngineConfig`` flag
+set; the backbone recipe from ``ModelSpec`` — both shared with
+``launch.api_server`` and ``benchmarks/``.  Launcher-specific flags:
 
-* ``continuous`` (default) — slot-based continuous batching: ``--num-slots``
-  lanes over one persistent cache, per-request prefill-on-arrival and
-  per-request retirement, drafter updates on a block-step cadence.
-* ``sync`` — legacy batch-synchronous path (bucket, pad, decode the whole
-  batch to completion) for comparison.
-
-``--kv-pages N`` (with ``--kv-page-size``) switches the continuous
-scheduler onto the paged KV pool: admission is gated on free pages instead
-of worst-case slot reservations, and the engine preempts-or-queues when
-the pool runs dry (see repro.serving.kv_pool).
-
-``--prefix-cache`` (paged mode, with ``--prefill-chunk``) shares
-page-aligned prompt prefixes across requests through a content-hash index
-over the pool: repeated system prompts are spliced into a new lane's block
-table by refcount instead of re-prefilled, partially-filled tail pages are
-copied-on-write, and refcount-0 cached pages are evicted LRU only under
-pressure.  Committed streams are bit-identical to cold prefill.
-
-``--adaptive-k`` turns speculation depth into a per-lane runtime quantity
-steered by each lane's acceptance EMA (see repro.core.schedule): greedy
-token streams are unchanged, but lanes with poor acceptance throttle their
-draft depth (and the whole batch drafts shallower once every lane has),
-recovering draft compute and KV-pool headroom under drift.
+  --requests N       how many synthetic requests to stream
+  --prompt-len L     synthetic prompt length (also the sync-path bucket)
+  --shift-at N       switch task category after N requests (drift demo)
+  --trace-out PATH   write the Chrome/Perfetto lifecycle trace
+  --metrics-out PATH write the final metrics snapshot (.json or .prom)
 
   PYTHONPATH=src python -m repro.launch.serve --arch vicuna-7b --tiny \\
       --requests 64 --shift-at 32 --scheduler continuous --num-slots 8
@@ -38,105 +23,42 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import numpy as np
-
-from repro.configs import get_config
-from repro.core import online as online_mod
-from repro.data import SyntheticTasks, TASK_CATEGORIES
-from repro.models.model import build_model
-from repro.serving import Request, ServingEngine
-from repro.training import pretrain
+from repro.serving.config import (EngineConfig, ModelSpec, build_engine,
+                                  build_model_bundle)
+from repro.serving.engine import Request
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="vicuna-7b")
-    ap.add_argument("--tiny", action="store_true")
     ap.add_argument("--requests", type=int, default=48)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--scheduler", choices=("sync", "continuous"),
-                    default="continuous")
-    ap.add_argument("--num-slots", type=int, default=8,
-                    help="decode lanes for the continuous scheduler")
-    ap.add_argument("--sync-every", type=int, default=1,
-                    help="speculative blocks fused per device sync "
-                         "(continuous scheduler superstep size; admission/"
-                         "retirement happen at superstep boundaries)")
-    ap.add_argument("--kv-pages", type=int, default=0,
-                    help=">0: paged KV cache with this many pool pages")
-    ap.add_argument("--kv-page-size", type=int, default=16,
-                    help="tokens per KV page (paged mode)")
-    ap.add_argument("--prefill-chunk", type=int, default=0,
-                    help=">0: prefill prompts in chunks of this many tokens "
-                         "interleaved with decode supersteps (bounds "
-                         "block-step jitter under long prompts; streams "
-                         "stay bit-identical to one-shot prefill)")
-    ap.add_argument("--prefix-cache", action="store_true",
-                    help="paged mode: content-address page-aligned prompt "
-                         "prefixes so repeated system prompts are spliced "
-                         "from the pool (refcount sharing + copy-on-write "
-                         "tails) instead of re-prefilled; needs --kv-pages "
-                         "and --prefill-chunk (streams stay bit-identical "
-                         "to cold prefill)")
-    ap.add_argument("--adaptive-k", action="store_true",
-                    help="per-lane acceptance-driven speculation depth: "
-                         "each lane's K adapts in [k-min, k-max] from its "
-                         "accept/reject EMA (greedy streams are unchanged; "
-                         "draft compute shrinks where acceptance is low)")
-    ap.add_argument("--k-min", type=int, default=1,
-                    help="adaptive-k depth floor")
-    ap.add_argument("--k-max", type=int, default=0,
-                    help="adaptive-k depth ceiling (0 = cfg k_spec)")
-    ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--shift-at", type=int, default=0,
                     help="switch task category after N requests (drift demo)")
-    ap.add_argument("--no-learn", action="store_true")
-    ap.add_argument("--pretrain-steps", type=int, default=200)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--telemetry", action="store_true",
-                    help="record the per-request lifecycle trace (metrics "
-                         "registry is always on; adds zero host syncs)")
     ap.add_argument("--trace-out", default=None,
                     help="write the Chrome/Perfetto trace JSON here "
                          "(implies --telemetry)")
     ap.add_argument("--metrics-out", default=None,
                     help="write the final metrics snapshot here (.json = "
                          "snapshot JSON, else Prometheus text format)")
-    ap.add_argument("--profile-dir", default=None,
-                    help="capture a jax.profiler trace of the first "
-                         "dispatches into this directory")
+    ModelSpec.add_args(ap)
+    EngineConfig.add_args(ap, EngineConfig(max_new=24))
     args = ap.parse_args()
+    spec = ModelSpec.from_args(args)
+    econf = EngineConfig.from_args(args)
+    econf.bucket = args.prompt_len      # sync path: bucket == prompt length
     if args.trace_out:
-        args.telemetry = True
+        econf.telemetry = True
 
-    cfg = get_config(args.arch, tiny=args.tiny).replace(dtype="float32")
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    tasks = SyntheticTasks(cfg.vocab_size, seed=args.seed)
-    params, _ = pretrain(model, params,
-                         tasks.stream(TASK_CATEGORIES, args.pretrain_steps,
-                                      8, 32, seed=args.seed + 1), lr=2e-3)
-    state = online_mod.init_trainer(model, jax.random.PRNGKey(args.seed + 7))
-    eng = ServingEngine(model, params, state, scheduler=args.scheduler,
-                        num_slots=args.num_slots, batch_size=args.batch,
-                        max_new=args.max_new, learn=not args.no_learn,
-                        buckets=(args.prompt_len,), kv_pages=args.kv_pages,
-                        kv_page_size=args.kv_page_size,
-                        sync_every=args.sync_every,
-                        prefill_chunk=args.prefill_chunk,
-                        prefix_cache=args.prefix_cache,
-                        adaptive_k=args.adaptive_k, k_min=args.k_min,
-                        k_max=args.k_max, telemetry=args.telemetry,
-                        profile_dir=args.profile_dir)
+    cfg, model, params, tasks, state = build_model_bundle(spec)
+    eng = build_engine(econf, model, params, state)
     t0 = time.monotonic()
-    done = []
+    done, handles = [], []
     for i in range(args.requests):
         cat = "qa" if (not args.shift_at or i < args.shift_at) else "math"
         prompt = tasks.sample(cat, 1, args.prompt_len, seed=1000 + i)[0]
-        eng.submit(Request(uid=i, prompt=prompt, max_new=args.max_new))
-        if (i + 1) % args.batch == 0:
+        handles.append(eng.submit_request(
+            Request(uid=i, prompt=prompt, max_new=econf.max_new)))
+        if (i + 1) % econf.batch_size == 0:
             done.extend(eng.step())
             mat = done[-1].mat if done else 0.0
             print(f"[serve] {i+1:4d} reqs  acceptance={eng.acceptance:.3f} "
@@ -148,13 +70,25 @@ def main():
     print(f"[serve] {len(done)} completions, {toks} gen tokens in {dt:.1f}s "
           f"({toks/dt:.1f} tok/s); final acceptance={eng.acceptance:.3f}; "
           f"latency p50={lat['p50_s']:.2f}s p95={lat['p95_s']:.2f}s")
-    if args.scheduler == "continuous":
+    # handle timestamps split each request's wall time into phases (the
+    # old Completion.latency_s only had the lump sum)
+    spans = [h.timings() for h in handles if h.finished]
+    if spans:
+        n = len(spans)
+        mean = lambda k: sum(s[k] or 0.0 for s in spans) / n  # noqa: E731
+        print(f"[serve] request phases (mean over {n}): "
+              f"queue_wait={mean('queue_wait_s')*1e3:.0f}ms "
+              f"prefill={mean('prefill_s')*1e3:.0f}ms "
+              f"decode={mean('decode_s')*1e3:.0f}ms "
+              f"ttft={mean('ttft_s')*1e3:.0f}ms "
+              f"e2e={mean('e2e_s')*1e3:.0f}ms")
+    if econf.scheduler == "continuous":
         d = eng.dispatch_stats()
         print(f"[serve] dispatch: sync_every={d['sync_every']} "
               f"host_syncs/100blk={d['host_syncs_per_100_blocks']:.1f} "
               f"host_wait={d['host_wait_s']:.2f}s "
               f"dispatches={d['dispatches']}")
-        if args.prefill_chunk:
+        if econf.prefill_chunk:
             tk = eng.tick_percentiles()
             print(f"[serve] chunked prefill: chunk={d['prefill_chunk']} "
                   f"chunk_steps={d['prefill_chunks']} "
@@ -162,12 +96,12 @@ def main():
                   f"max_tick_prefill_tokens={d['max_tick_prefill_tokens']} "
                   f"tick p50={tk['p50_s']*1e3:.0f}ms "
                   f"p95={tk['p95_s']*1e3:.0f}ms max={tk['max_s']*1e3:.0f}ms")
-    if args.kv_pages:
+    if econf.kv_pages:
         kv = eng.kv_stats()
         print(f"[serve] paged KV: peak_util={kv['peak_utilization']:.2f} "
               f"preemptions={kv['preemptions']} "
               f"peak_live={kv['peak_live_slots']}")
-        if args.prefix_cache:
+        if econf.prefix_cache:
             print(f"[serve] prefix cache: hits={kv['prefix_hits']}/"
                   f"{kv['prefix_lookups']} lookups, "
                   f"tokens_spliced={kv['prefix_hit_tokens']} "
@@ -175,14 +109,14 @@ def main():
                   f"evictions={kv['prefix_evictions']} "
                   f"cached_pages={kv['cached_pages']} "
                   f"indexed={kv['indexed_pages']}")
-    if args.adaptive_k:
+    if econf.adaptive_k:
         ak = eng.adaptive_stats()
         print(f"[serve] adaptive K in [{ak['k_min']},{ak['k_max']}]: "
               f"mean_depth={ak['mean_depth']:.2f} "
               f"recent={ak['k_mean_recent']:.2f} "
               f"draft_efficiency={ak['draft_efficiency']:.2f} "
               f"k_lane={ak['k_lane'].tolist()}")
-    if not args.no_learn and args.scheduler == "continuous":
+    if econf.learn and econf.scheduler == "continuous":
         tt = eng.train_telemetry()
         if tt["updates"]:
             print(f"[serve] DVI train: updates={tt['updates']} "

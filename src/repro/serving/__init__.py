@@ -1,3 +1,6 @@
+from repro.serving.config import EngineConfig
 from repro.serving.engine import ServingEngine, Request, Completion
+from repro.serving.handles import QueueFull, RequestHandle, TenantQueue
 
-__all__ = ["ServingEngine", "Request", "Completion"]
+__all__ = ["ServingEngine", "Request", "Completion", "RequestHandle",
+           "QueueFull", "TenantQueue", "EngineConfig"]

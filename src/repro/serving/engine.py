@@ -127,6 +127,7 @@ races the two on the same Poisson arrival trace.
 from __future__ import annotations
 
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
@@ -140,6 +141,7 @@ from repro.core import schedule as schedule_mod
 from repro.core import spec as spec_mod
 from repro.models import transformer as tfm
 from repro.models.model import Model
+from repro.serving.handles import QueueFull, RequestHandle, TenantQueue
 from repro.serving.kv_pool import KVPool
 from repro.serving.telemetry import ServingTelemetry
 
@@ -149,6 +151,8 @@ class Request:
     uid: int
     prompt: np.ndarray            # (Tp,) int32
     max_new: int = 64
+    tenant: str = "default"       # weighted-fair queue bucket
+    priority: int = 0             # within-tenant ordering (higher first)
 
 
 @dataclass
@@ -158,7 +162,10 @@ class Completion:
     gen_tokens: np.ndarray        # generated tokens only
     mat: float                    # mean accepted tokens/block for this request
     wall_s: float                 # engine time attributed to this request
-    latency_s: float = 0.0        # submit -> completion wall time
+    # submit -> completion wall time.  Superseded by the RequestHandle
+    # timestamp set (queue-wait / prefill / decode split via
+    # ``handle.timings()``); kept for existing consumers of the flat value.
+    latency_s: float = 0.0
 
 
 @dataclass
@@ -174,6 +181,7 @@ class _Slot:
     admit_seq: int = 0            # admission order (paged preemption picks max)
     pf_prompt: Optional[np.ndarray] = None  # trimmed replay source (chunked)
     pf_pos: Optional[int] = None  # prompt tokens prefilled; None = decoding
+    handle: Optional[RequestHandle] = None  # caller-facing async view
 
 
 @dataclass
@@ -211,8 +219,10 @@ class ServingEngine:
     trace_limit: int = 200_000    # tracer event cap (overflow -> dropped)
     profile_dir: Optional[str] = None  # jax.profiler capture dir (optional)
     profile_steps: int = 32       # dispatches inside the capture window
+    max_queue: int = 0            # admission queue bound (0 = unbounded);
+                                  # submissions past it raise QueueFull
+    tenant_weights: Optional[Dict[str, float]] = None  # WFQ shares (def. 1)
     _queue: Dict[int, List[Request]] = field(default_factory=dict)
-    _fifo: deque = field(default_factory=deque)
     # registry-backed stats facade; built in __post_init__ from the ONE
     # canonical schema (telemetry.LEGACY_STATS) — do not pass explicitly
     stats: object = None
@@ -269,6 +279,12 @@ class ServingEngine:
         self._cool_host = np.zeros((self.num_slots,), np.int32)
         self._submit_t: Dict[int, float] = {}
         self._blocks_since_update = 0
+        # redesigned request surface: per-tenant weighted-fair admission
+        # queue (single default tenant degenerates to the legacy FIFO order
+        # exactly) + live handles for every accepted, unfinished request
+        self._tq = TenantQueue(max_queue=self.max_queue,
+                               weights=self.tenant_weights)
+        self._handles: Dict[int, RequestHandle] = {}
 
         # telemetry: the metrics registry (and the legacy `stats` facade
         # over it) is ALWAYS on — it is pure host-side arithmetic riding
@@ -453,20 +469,59 @@ class ServingEngine:
                 return b
         return self.buckets[-1]
 
-    def submit(self, req: Request) -> None:
+    def submit_request(self, req: Request) -> RequestHandle:
+        """Accept `req` into the admission queue and return its handle.
+
+        The handle is the caller's async view: ``deltas()`` streams
+        generated-token chunks as superstep boundaries harvest them,
+        ``result()`` blocks for the Completion, ``cancel()`` requests
+        retirement at the next boundary.  When the queue is bounded
+        (``max_queue``) and full, the submission is REJECTED: the
+        ``rejected`` counter increments, the returned-would-be handle is
+        finished with outcome ``"rejected"``, and ``QueueFull`` is raised
+        (it carries the handle as ``exc.handle``)."""
         now = self.clock()
+        h = RequestHandle(req.uid, getattr(req, "tenant", "default"),
+                          int(getattr(req, "priority", 0)), clock=self.clock)
+        h.t_submit = now
+        # submitted / per-tenant counters include rejected submissions, so
+        # submitted == completed + cancelled + rejected + still-queued +
+        # live reconciles exactly (scripts/check_metrics_schema.py)
+        self.stats["submitted"] += 1
+        self.telem.c_tenant.inc(h.tenant)
+        if self.scheduler == "continuous":
+            try:
+                self._tq.push(req)
+            except QueueFull as e:
+                self.stats["rejected"] += 1
+                h.finish(None, "rejected", t_done=now)
+                e.handle = h
+                raise
+        else:
+            b = self._bucket(len(req.prompt))
+            self._queue.setdefault(b, []).append(req)
+        self._handles[req.uid] = h
         self._submit_t[req.uid] = now
         tr = self.telem.tracer
         if tr is not None and self.scheduler == "continuous":
             tr.async_begin("request", req.uid, now,
                            args={"prompt_len": int(len(req.prompt)),
-                                 "max_new": int(req.max_new)})
+                                 "max_new": int(req.max_new),
+                                 "tenant": h.tenant})
             tr.async_begin("queued", req.uid, now)
         if self.scheduler == "continuous":
-            self._fifo.append(req)
-        else:
-            b = self._bucket(len(req.prompt))
-            self._queue.setdefault(b, []).append(req)
+            self.telem.g_queue.set(len(self._tq))
+        return h
+
+    def submit(self, req: Request) -> RequestHandle:
+        """Deprecated fire-and-forget submission (pre-handle API).  Thin
+        shim over ``submit_request`` — the committed token stream is
+        bit-identical; only the return surface changed."""
+        warnings.warn(
+            "ServingEngine.submit(Request) is deprecated; use "
+            "submit_request(Request) -> RequestHandle (deltas/result/"
+            "cancel)", DeprecationWarning, stacklevel=2)
+        return self.submit_request(req)
 
     def _pad(self, req: Request, bucket: int) -> np.ndarray:
         p = req.prompt[-bucket:]
@@ -522,17 +577,150 @@ class ServingEngine:
                           mat=mat, wall_s=wall_s, latency_s=lat)
 
     # ------------------------------------------------------------------
+    # handle finalization + cancellation (boundary-only)
+    # ------------------------------------------------------------------
+
+    def _finish_handle(self, uid: int, comp: Completion,
+                       outcome: str = "completed") -> None:
+        """Terminal handle transition: deliver any final tokens, observe
+        TTFT if this is the first delivery (sync path: tokens arrive only
+        at completion), stamp t_done, wake every waiter."""
+        h = self._handles.pop(uid, None)
+        if h is None:
+            return
+        if comp is not None and len(comp.gen_tokens):
+            first = h.t_first_token is None
+            h.feed(comp.gen_tokens)
+            if first and h.t_first_token is not None:
+                self.telem.h_ttft.observe(
+                    h.t_first_token - (h.t_submit if h.t_submit is not None
+                                       else h.t_first_token))
+        h.finish(comp, outcome)
+
+    def _finish_cancelled_queued(self, uid: int) -> None:
+        """Cancel honored while the request sat in the admission queue (or
+        a preemption replay): no lane, no pages — pure bookkeeping."""
+        orig_prompt, gen0, blocks0, wall0, _ = self._preempted.pop(
+            uid, (None, [], 0, 0.0, None))
+        self._submit_t.pop(uid, None)
+        self.stats["cancelled"] += 1
+        now = self.clock()
+        tr = self.telem.tracer
+        if tr is not None and self.scheduler == "continuous":
+            tr.async_end("queued", uid, now, args={"cancelled": True})
+            tr.async_end("request", uid, now, args={"cancelled": True})
+        h = self._handles.pop(uid, None)
+        if h is not None:
+            gen = np.asarray(gen0, np.int32)
+            prompt = (np.asarray(orig_prompt, np.int32)
+                      if orig_prompt is not None else np.zeros(0, np.int32))
+            h.finish(Completion(uid=uid,
+                                tokens=np.concatenate([prompt, gen]),
+                                gen_tokens=gen,
+                                mat=len(gen0) / max(blocks0, 1),
+                                wall_s=wall0),
+                     "cancelled", t_done=now)
+
+    def _cancel_lane(self, s: int) -> None:
+        """Retire live lane `s` on a cancel request — at a superstep
+        boundary ONLY (the caller guarantees no superstep is in flight):
+        free/decref its pages (prefix-shared included — published prefixes
+        stay cached and evictable for the next tenant), unmap its row,
+        reset the lane, and finish the handle with the committed-so-far
+        partial stream.  Adds NO device_get: reset/unmap queue like any
+        other boundary op."""
+        st = self._slots[s]
+        uid, mid_prefill = st.uid, st.pf_pos is not None
+        if self.paged:
+            self._pool.free(uid)         # decref: shared pages survive in
+            self._tbl_host[s] = -1       # the prefix cache, owned ones free
+        self._cache = self._reset_fn(self._cache, jnp.int32(s))
+        self._slots[s] = None
+        self._done[s] = True
+        self._preempted.pop(uid, None)
+        self._submit_t.pop(uid, None)
+        self.stats["cancelled"] += 1
+        now = self.clock()
+        tr = self.telem.tracer
+        if tr is not None:
+            tr.instant(s, "cancel", now,
+                       args={"uid": uid, "gen_len": len(st.gen),
+                             "mid_prefill": mid_prefill})
+            tr.async_end("prefill" if mid_prefill else "decode", uid, now,
+                         args={"cancelled": True})
+            tr.async_end("request", uid, now, args={"cancelled": True})
+        h = self._handles.pop(uid, None)
+        if h is not None:
+            gen = np.asarray(st.gen, np.int32)
+            h.finish(Completion(uid=uid,
+                                tokens=np.concatenate([st.prompt, gen]),
+                                gen_tokens=gen,
+                                mat=len(st.gen) / max(st.blocks, 1),
+                                wall_s=st.wall_s),
+                     "cancelled", t_done=now)
+
+    def _sweep_cancels(self) -> None:
+        """Honor pending ``handle.cancel()`` flags.  Runs right after the
+        harvest — the one point in the tick where no superstep is in
+        flight, so retiring a lane (pages freed, row unmapped, cache
+        reset) cannot race device work that still reads those pages.
+        Queued requests are dropped from the tenant queue; live lanes
+        (decoding OR mid-chunked-prefill) are retired in place.  Lanes
+        untouched by the sweep keep their state byte-for-byte, so their
+        committed streams stay bit-identical (tested)."""
+        want = [uid for uid, h in self._handles.items()
+                if h.cancel_requested and not h.finished]
+        if not want:
+            return
+        in_slot = {st.uid: s for s, st in enumerate(self._slots)
+                   if st is not None}
+        queued = set(want) - set(in_slot)
+        if queued:
+            for req in self._tq.drop(queued):
+                self._finish_cancelled_queued(req.uid)
+        for uid in want:
+            s = in_slot.get(uid)
+            if s is not None:
+                self._cancel_lane(s)
+
+    def abort_pending(self, reason: str) -> None:
+        """Fail every unfinished handle (engine thread crashed, or shutdown
+        without drain): unblocks all blocked consumers with outcome
+        ``"error"``.  Engine device state is NOT touched."""
+        for h in list(self._handles.values()):
+            h.abort(reason)
+        self._handles.clear()
+
+    # ------------------------------------------------------------------
     # sync scheduler (legacy batch path)
     # ------------------------------------------------------------------
 
     def _step_sync(self) -> List[Completion]:
         """Serve one batch from the fullest bucket; maybe update the drafter."""
+        # cancels are honored at batch formation (the sync path's only
+        # scheduling boundary): cancelled waiters never enter a batch
+        for b, lst in list(self._queue.items()):
+            keep = []
+            for r in lst:
+                hc = self._handles.get(r.uid)
+                if hc is not None and hc.cancel_requested:
+                    self._finish_cancelled_queued(r.uid)
+                else:
+                    keep.append(r)
+            self._queue[b] = keep
         if not any(self._queue.values()):
             return []
         bucket = max(self._queue, key=lambda b: len(self._queue[b]))
         reqs = self._queue[bucket][:self.batch_size]
         self._queue[bucket] = self._queue[bucket][self.batch_size:]
         n_real = len(reqs)
+        t_b = self.clock()
+        for r in reqs:
+            hb = self._handles.get(r.uid)
+            if hb is not None and hb.t_admit is None:
+                hb.t_admit = t_b
+                self.telem.h_queue_wait.observe(
+                    t_b - (hb.t_submit if hb.t_submit is not None else t_b))
         while len(reqs) < self.batch_size:       # pad batch with replays
             reqs.append(reqs[-1])
         # padded lanes are masked out of generation, tuple logging, and stats
@@ -563,9 +751,11 @@ class ServingEngine:
             # the batch decodes to the engine-wide max_new (head-of-line cost
             # of sync scheduling) but the client only gets what it asked for
             gen = toks[i, bucket:lens[i]][:min(r.max_new, self.max_new)]
-            outs.append(self._complete(
+            comp = self._complete(
                 r.uid, np.concatenate([toks[i, :bucket], gen]), gen,
-                mat, wall / n_real))
+                mat, wall / n_real)
+            outs.append(comp)
+            self._finish_handle(r.uid, comp)
         return outs
 
     # ------------------------------------------------------------------
@@ -699,10 +889,19 @@ class ServingEngine:
         `reserve`: extra pages kept free on top of the watermark
         (pre-admission passes the live lanes' growth demand)."""
         tr = self.telem.tracer
-        while self._fifo and not all(s is not None for s in self._slots):
+        while self._tq and not all(s is not None for s in self._slots):
             t_a0 = self.clock()
             slot = next(i for i, s in enumerate(self._slots) if s is None)
-            req = self._fifo[0]
+            req = self._tq.peek()
+            if req is None:
+                break
+            hq = self._handles.get(req.uid)
+            if hq is not None and hq.cancel_requested:
+                # cancelled while queued: finalize instead of admitting —
+                # no lane, no pages, no prefill compute ever spent
+                self._tq.take(req)
+                self._finish_cancelled_queued(req.uid)
+                continue
             max_new = min(req.max_new, self.max_new)
             gen_carry = len(self._preempted.get(req.uid, (None, ()))[1])
             prompt = self._trim_prompt(req, max_new - gen_carry)
@@ -747,7 +946,7 @@ class ServingEngine:
                                          "free": self._pool.available_pages,
                                          "reserve": reserve})
                     break
-                self._fifo.popleft()
+                self._tq.take(req)
                 fresh = self._pool.ensure(req.uid, need) or []
                 cow_dst = fresh[0] if hit.cow_tokens else 0
                 if hit.cow_tokens:
@@ -781,7 +980,7 @@ class ServingEngine:
                                          "free": self._pool.free_pages,
                                          "reserve": reserve})
                     break
-                self._fifo.popleft()
+                self._tq.take(req)
                 pages = self._pool.alloc(need, owner=req.uid)
                 row = np.full(self._mps, -1, np.int32)
                 row[:len(pages)] = pages
@@ -797,7 +996,7 @@ class ServingEngine:
                 if self.prefix_cache and not chunked:
                     self._pool.publish_prefix(req.uid, prompt[:-1])
             else:
-                self._fifo.popleft()
+                self._tq.take(req)
                 if chunked:
                     self._cache = self._admit_chunk_fn(
                         self.params, self._cache, jnp.asarray(prompt[:c1]),
@@ -817,7 +1016,17 @@ class ServingEngine:
                                       cache_len=c1,
                                       admit_seq=seq0,
                                       pf_prompt=prompt if chunked else None,
-                                      pf_pos=c1 if chunked else None)
+                                      pf_pos=c1 if chunked else None,
+                                      handle=hq)
+            t_adm = self.clock()
+            if hq is not None:
+                if hq.t_admit is None:   # FIRST admission only: a preempted
+                    hq.t_admit = t_adm   # replay keeps its original wait
+                    self.telem.h_queue_wait.observe(
+                        t_adm - (hq.t_submit
+                                 if hq.t_submit is not None else t_adm))
+                if not chunked and hq.t_prefill_done is None:
+                    hq.t_prefill_done = t_adm
             # fresh depth-controller state for the recycled lane: a request
             # must not inherit the previous occupant's throttled depth (or a
             # preempted replay its own pre-preemption EMA — prefix replay
@@ -861,8 +1070,13 @@ class ServingEngine:
                                    st.wall_s, st.admit_seq)
         combined = np.concatenate(
             [st.prompt, np.asarray(st.gen, np.int32)]).astype(np.int32)
-        self._fifo.appendleft(Request(uid=st.uid, prompt=combined,
-                                      max_new=st.max_new))
+        # replays bypass fairness AND the max_queue bound: the request was
+        # already admitted once; rejecting or re-queuing it fairly would
+        # discard committed work / break the preemption no-livelock argument
+        self._tq.push_front(Request(
+            uid=st.uid, prompt=combined, max_new=st.max_new,
+            tenant=st.handle.tenant if st.handle is not None else "default",
+            priority=st.handle.priority if st.handle is not None else 0))
         self._cache = self._reset_fn(self._cache, jnp.int32(slot))
         tr = self.telem.tracer
         if tr is not None:
@@ -1032,6 +1246,8 @@ class ServingEngine:
                 st.pf_pos = None
                 st.pf_prompt = None
                 self._done[s] = False
+                if st.handle is not None and st.handle.t_prefill_done is None:
+                    st.handle.t_prefill_done = t_c1
                 if tr is not None:
                     tr.async_end("prefill", st.uid, t_c1)
                     tr.async_begin("decode", st.uid, t_c1,
@@ -1202,6 +1418,18 @@ class ServingEngine:
             st.wall_s += wall_share * nb
             st.cache_len += int(committed_np[s])
             st.gen.extend(int(t) for t in gen_np[s, :int(cnt_np[s])])
+            if st.handle is not None and int(cnt_np[s]) > 0:
+                # stream the freshly committed chunk to the handle NOW (the
+                # superstep boundary) — consumers see tokens per harvest,
+                # not per completion; feed is monotone so replays are safe
+                first = st.handle.t_first_token is None
+                st.handle.feed(st.gen)
+                if first and st.handle.t_first_token is not None:
+                    self.telem.h_ttft.observe(
+                        st.handle.t_first_token
+                        - (st.handle.t_submit
+                           if st.handle.t_submit is not None
+                           else st.handle.t_first_token))
             self.stats["blocks"] += nb
             self.stats["committed"] += int(committed_np[s])
             self.stats["accepted"] += int(accepted_np[s])
@@ -1234,9 +1462,11 @@ class ServingEngine:
                 self._cool_host[s] = cool_np[s]
             if done_np[s]:               # EOS or budget, detected in-graph
                 gen = np.asarray(st.gen, np.int32)
-                outs.append(self._complete(
+                comp = self._complete(
                     st.uid, np.concatenate([st.prompt, gen]), gen,
-                    len(st.gen) / max(st.blocks, 1), st.wall_s))
+                    len(st.gen) / max(st.blocks, 1), st.wall_s)
+                outs.append(comp)
+                self._finish_handle(st.uid, comp)
                 self.stats["requests"] += 1
                 if self.paged:
                     self._pool.free(st.uid)   # copy-free eviction: pages
@@ -1305,6 +1535,11 @@ class ServingEngine:
             _phase("pre_admit", self._admit_waiting,
                    self._growth_reserve() if self.paged else 0)
             outs = _phase("harvest", self._harvest)
+            # cancellation boundary: the harvest just retired the in-flight
+            # superstep, so lanes can be torn down without racing device
+            # reads of their pages; queued cancels drop out of the tenant
+            # queue before this tick's growth/admission see them
+            _phase("sweep_cancels", self._sweep_cancels)
             # grow BEFORE admitting: admission then sees the true residual
             # capacity, instead of grabbing pages that live lanes
             # immediately claw back by preempting the just-admitted lane.
@@ -1328,7 +1563,7 @@ class ServingEngine:
             self.telem.h_tick.observe(dt)
             t = self.telem
             t.g_live.set(self.active_slots)
-            t.g_queue.set(len(self._fifo))
+            t.g_queue.set(len(self._tq))
             if self.paged:
                 # free counts evictable cached pages — what admission may
                 # actually use; g_kv_cached breaks out the warm subset
@@ -1342,7 +1577,7 @@ class ServingEngine:
             if tr is not None:
                 tr.span(tid_e, "tick", tick0, tick0 + dt,
                         args={"live": self.active_slots,
-                              "queued": len(self._fifo)})
+                              "queued": len(self._tq)})
             self._tick_t0 = None
         return outs
 
@@ -1358,8 +1593,10 @@ class ServingEngine:
     @property
     def busy(self) -> bool:
         # _update_inflight keeps the engine busy so the driver steps once
-        # more and the final drafter update of a burst is actually folded
-        return (bool(self._fifo) or self.active_slots > 0
+        # more and the final drafter update of a burst is actually folded;
+        # queued-but-cancelled requests keep _tq non-empty until the sweep
+        # finalizes them, so the stepping loop is guaranteed to reach them
+        return (bool(self._tq) or self.active_slots > 0
                 or self._inflight is not None
                 or self._update_inflight is not None
                 or any(self._queue.values()))

@@ -56,6 +56,12 @@ dvi_serving_prefix_hit_tokens_total            counter    prompt tokens skipped 
 dvi_serving_prefix_cow_copies_total            counter    copy-on-write page copies performed
                                                           at warm admission (<= hits)
 dvi_serving_prefix_evictions_total             counter    cached pages lazily reclaimed (LRU)
+dvi_serving_submitted_total                    counter    requests submitted (incl. rejected)
+dvi_serving_cancelled_total                    counter    requests cancelled (any stage)
+dvi_serving_rejected_total                     counter    submissions rejected (QueueFull)
+dvi_serving_requests_by_tenant                 counter    per-tenant submissions, label
+                                                          tenant="..." (values sum to
+                                                          submitted_total, EXACT)
 dvi_serving_peak_live_slots                    gauge      high-water concurrent lanes
 dvi_serving_live_slots                         gauge      currently occupied lanes
 dvi_serving_queue_depth                        gauge      requests waiting for a lane
@@ -65,6 +71,8 @@ dvi_serving_kv_free_pages                      gauge      pool pages free + evic
 dvi_serving_kv_cached_pages                    gauge      evictable prefix-cached pages
 dvi_serving_depth_mean                         gauge      mean live-lane speculation depth
 dvi_serving_request_latency_seconds            histogram  submit -> completion (log buckets)
+dvi_serving_queue_wait_seconds                 histogram  submit -> first admission
+dvi_serving_ttft_seconds                       histogram  submit -> first committed token
 dvi_serving_tick_seconds                       histogram  engine tick wall time (log buckets)
 dvi_serving_sync_wait_seconds                  histogram  per-harvest device wait (log buckets)
 dvi_serving_block_accepted_drafts              histogram  PER-BLOCK accepted drafted tokens m
@@ -165,6 +173,34 @@ class Gauge(Counter):
         return {"type": "gauge", "help": self.help, "value": self.value}
 
 
+class LabeledCounter:
+    """Counter with ONE label dimension (e.g. ``tenant``): a dict of
+    monotone per-label-value series.  The snapshot carries both the
+    per-label ``values`` map and their total under ``value`` so scrapers
+    that only understand flat counters still see the aggregate; the
+    schema checker asserts the per-tenant values sum to
+    ``dvi_serving_submitted_total`` exactly."""
+    kind = "counter"
+
+    def __init__(self, name: str, help: str, label: str):
+        self.name, self.help, self.label = name, help, label
+        self.values: Dict[str, float] = {}
+
+    @property
+    def value(self):
+        return sum(self.values.values())
+
+    def inc(self, label_value: str, v=1):
+        self.values[label_value] = self.values.get(label_value, 0) + v
+
+    def reset(self):
+        self.values = {}
+
+    def to_snapshot(self) -> dict:
+        return {"type": "counter", "help": self.help, "label": self.label,
+                "values": dict(self.values), "value": self.value}
+
+
 def log_buckets(lo: float, hi: float, base: float = 2.0) -> List[float]:
     """Geometric bucket upper bounds from `lo` to >= `hi` (for durations:
     resolution proportional to magnitude, O(log(hi/lo)) buckets)."""
@@ -241,6 +277,10 @@ class MetricsRegistry:
                   buckets: Sequence[float] = ()) -> Histogram:
         return self._register(Histogram(name, help, buckets))
 
+    def labeled_counter(self, name: str, help: str = "",
+                        label: str = "tenant") -> LabeledCounter:
+        return self._register(LabeledCounter(name, help, label))
+
     def _register(self, m):
         if m.name in self._metrics:
             raise ValueError(f"metric {m.name!r} already registered")
@@ -278,6 +318,10 @@ def snapshot_delta(cur: dict, prev: dict) -> dict:
             out[name] = dict(c)
         elif c["type"] == "counter":
             out[name] = dict(c, value=c["value"] - p["value"])
+            if "values" in c:
+                pv = p.get("values", {})
+                out[name]["values"] = {k: v - pv.get(k, 0)
+                                       for k, v in c["values"].items()}
         else:
             pb = {tuple([b]): n for b, n in p["buckets"]}
             out[name] = dict(
@@ -293,6 +337,15 @@ def _fmt(v) -> str:
     return repr(v) if isinstance(v, float) else str(v)
 
 
+def _escape_label(v: str) -> str:
+    return str(v).replace("\\", r"\\").replace('"', r'\"').replace("\n",
+                                                                   r"\n")
+
+
+def _unescape_label(v: str) -> str:
+    return v.replace(r"\n", "\n").replace(r'\"', '"').replace(r"\\", "\\")
+
+
 def render_prometheus(snapshot: dict) -> str:
     """Prometheus exposition text format (round-trips through
     ``parse_prometheus_text``)."""
@@ -303,7 +356,13 @@ def render_prometheus(snapshot: dict) -> str:
             lines.append(f"# HELP {name} {m['help']}")
         lines.append(f"# TYPE {name} {m['type']}")
         if m["type"] in ("counter", "gauge"):
-            lines.append(f"{name} {_fmt(m['value'])}")
+            if "values" in m:                  # one-label counter series
+                lab = m.get("label", "tenant")
+                for lv in sorted(m["values"]):
+                    lines.append(f'{name}{{{lab}="{_escape_label(lv)}"}} '
+                                 f'{_fmt(m["values"][lv])}')
+            else:
+                lines.append(f"{name} {_fmt(m['value'])}")
         else:
             for b, cum in m["buckets"]:
                 le = "+Inf" if b == "+Inf" else _fmt(b)
@@ -350,6 +409,13 @@ def parse_prometheus_text(text: str) -> dict:
             le = key[key.index('le="') + 4:-2]
             out[base]["buckets"].append(
                 ["+Inf" if le == "+Inf" else num(le), num(val)])
+        elif key.endswith('"}') and "{" in key:
+            base = key[:key.index("{")]
+            lab, _, lv = key[key.index("{") + 1:-2].partition('="')
+            m = out[base]
+            m["label"] = lab
+            m.setdefault("values", {})[_unescape_label(lv)] = num(val)
+            m["value"] = sum(m["values"].values())
         elif key.endswith("_sum") and key[:-4] in types \
                 and types[key[:-4]] == "histogram":
             out[key[:-4]]["sum"] = num(val)
@@ -561,6 +627,12 @@ def validate_trace(trace: dict) -> dict:
 LEGACY_STATS = {
     "requests": ("dvi_serving_requests_total", "counter",
                  "completed requests"),
+    "submitted": ("dvi_serving_submitted_total", "counter",
+                  "requests submitted (accepted + rejected)"),
+    "cancelled": ("dvi_serving_cancelled_total", "counter",
+                  "requests cancelled at any lifecycle stage"),
+    "rejected": ("dvi_serving_rejected_total", "counter",
+                 "submissions rejected with QueueFull backpressure"),
     "blocks": ("dvi_serving_blocks_total", "counter",
                "per-live-lane speculative blocks"),
     "steps": ("dvi_serving_steps_total", "counter",
@@ -642,6 +714,16 @@ class ServingTelemetry:
         self.h_sync_wait = reg.histogram(
             "dvi_serving_sync_wait_seconds",
             "per-harvest host wait on the device", dur)
+        self.h_queue_wait = reg.histogram(
+            "dvi_serving_queue_wait_seconds",
+            "request submit -> first lane admission", dur)
+        self.h_ttft = reg.histogram(
+            "dvi_serving_ttft_seconds",
+            "request submit -> first committed token", dur)
+        self.c_tenant = reg.labeled_counter(
+            "dvi_serving_requests_by_tenant",
+            "requests submitted per tenant (values sum to submitted_total)",
+            label="tenant")
         kb = list(range(k_max + 1))            # exact integer buckets 0..k
         self.h_block_accept = reg.histogram(
             "dvi_serving_block_accepted_drafts",

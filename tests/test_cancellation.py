@@ -1,0 +1,174 @@
+"""Boundary-only cancellation: queued, mid-chunked-prefill, mid-decode,
+and prefix-shared requests all retire at the next superstep boundary,
+untouched lanes stay bit-identical, the paged pool drains to baseline
+(refcounted frees included), and the zero-host-sync contract survives
+(cancellation adds no device_get: host_syncs == dispatches)."""
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.core import online
+from repro.models.model import build_model
+from repro.serving import Request, ServingEngine
+
+N_PAGES = 32
+
+
+@pytest.fixture(scope="module")
+def backbone():
+    cfg = tiny_cfg("vicuna-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _reqs(cfg, n, seed=0, max_new=10, plen=12):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(2, cfg.vocab_size, plen,
+                                        dtype=np.int64).astype(np.int32),
+                    max_new=max_new) for i in range(n)]
+
+
+def _engine(model, params, **kw):
+    state = online.init_trainer(model, jax.random.PRNGKey(3))
+    kw.setdefault("scheduler", "continuous")
+    kw.setdefault("num_slots", 3)
+    kw.setdefault("max_new", 16)
+    kw.setdefault("buckets", (16,))
+    return ServingEngine(model, params, state, **kw)
+
+
+def _assert_clean(eng):
+    """Post-drain invariants: no live lanes, pool at baseline, telemetry
+    contract intact."""
+    assert not eng.busy
+    assert all(s is None for s in eng._slots)
+    d = eng.dispatch_stats()
+    assert d["host_syncs"] == d["dispatches"]
+    if eng.kv_pages:
+        kv = eng.kv_stats()
+        assert kv["used_pages"] == 0
+        assert kv["free_pages"] + kv["cached_pages"] == eng.kv_pages
+
+
+def test_cancel_queued_never_runs(backbone):
+    cfg, model, params = backbone
+    eng = _engine(model, params, num_slots=2)
+    hs = [eng.submit_request(r) for r in _reqs(cfg, 5, seed=1)]
+    hs[4].cancel()                       # still queued (2 slots, 5 reqs)
+    outs = eng.run(500)
+    assert hs[4].outcome == "cancelled"
+    assert hs[4].tokens() == []          # never admitted, never decoded
+    assert {c.uid for c in outs} == {0, 1, 2, 3}
+    assert eng.stats["cancelled"] == 1 and eng.stats["requests"] == 4
+    _assert_clean(eng)
+
+
+def test_cancel_mid_decode_keeps_other_lanes_bit_identical(backbone):
+    cfg, model, params = backbone
+    reqs = _reqs(cfg, 4, seed=2, max_new=16)
+
+    ref = _engine(model, params)         # no-cancel reference streams
+    for r in reqs:
+        ref.submit_request(r)
+    ref_outs = {c.uid: c.gen_tokens.tolist() for c in ref.run(500)}
+
+    eng = _engine(model, params)
+    hs = [eng.submit_request(r) for r in reqs]
+    outs = list(eng.step())              # first superstep: lanes live
+    hs[1].cancel()                       # honoured at the NEXT boundary
+    outs += eng.run(500)
+    assert hs[1].outcome == "cancelled"
+    got1 = hs[1].tokens()
+    assert got1 == ref_outs[1][:len(got1)]   # committed prefix preserved
+    assert len(got1) < len(ref_outs[1])      # and generation stopped early
+    for c in outs:                       # untouched lanes: bit-identical
+        assert c.gen_tokens.tolist() == ref_outs[c.uid], f"uid {c.uid}"
+    assert {c.uid for c in outs} == {0, 2, 3}
+    _assert_clean(eng)
+
+
+def test_cancel_mid_chunked_prefill(backbone):
+    cfg, model, params = backbone
+    eng = _engine(model, params, kv_pages=N_PAGES, kv_page_size=8,
+                  prefill_chunk=8, num_slots=3)
+    reqs = _reqs(cfg, 3, seed=3, plen=24, max_new=8)   # 3 chunks each
+    hs = [eng.submit_request(r) for r in reqs]
+    eng.step()                           # admit; prefill still chunking
+    mid = {s.uid for s in eng._slots
+           if s is not None and s.pf_pos is not None}
+    assert mid, "no lane was mid-chunked-prefill after one tick"
+    victim = hs[min(mid)]
+    victim.cancel()
+    eng.run(500)
+    assert victim.outcome == "cancelled"
+    done = [h for h in hs if h is not victim]
+    assert all(h.outcome == "completed" for h in done)
+    _assert_clean(eng)
+
+
+def test_cancel_prefix_shared_decrefs_not_frees(backbone):
+    cfg, model, params = backbone
+    eng = _engine(model, params, kv_pages=N_PAGES, kv_page_size=8,
+                  prefix_cache=True, prefill_chunk=8, num_slots=4)
+    rng = np.random.default_rng(7)
+    shared = rng.integers(2, cfg.vocab_size, 16,
+                          dtype=np.int64).astype(np.int32)
+    hs = [eng.submit_request(Request(uid=0, prompt=shared.copy(),
+                                     max_new=12))]
+    for _ in range(3):                   # publish uid 0's pages first so
+        eng.step()                       # later arrivals can splice them
+    hs += [eng.submit_request(Request(uid=i, prompt=shared.copy(),
+                                      max_new=12)) for i in range(1, 4)]
+    eng.step()
+    assert eng.kv_stats()["prefix_hits"] >= 1   # sharing actually happened
+    hs[1].cancel()
+    hs[2].cancel()
+    eng.run(500)
+    assert hs[1].outcome == "cancelled" and hs[2].outcome == "cancelled"
+    assert hs[0].outcome == "completed" and hs[3].outcome == "completed"
+    # survivors decode the same stream sharing or not: greedy + same prefix
+    assert hs[0].tokens() == hs[3].tokens()
+    _assert_clean(eng)
+
+
+def test_cancelled_then_resubmitted_prompt_hits_prefix_cache(backbone):
+    cfg, model, params = backbone
+    eng = _engine(model, params, kv_pages=N_PAGES, kv_page_size=8,
+                  prefix_cache=True, prefill_chunk=8, num_slots=2)
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(2, cfg.vocab_size, 16,
+                          dtype=np.int64).astype(np.int32)
+    h1 = eng.submit_request(Request(uid=0, prompt=prompt.copy(), max_new=16))
+    # let prefill finish and publish pages into the prefix index, then
+    # cancel mid-decode: the pages drop to refcount 0 but stay CACHED
+    for _ in range(3):
+        eng.step()
+    h1.cancel()
+    eng.run(500)
+    assert h1.outcome == "cancelled"
+    kv = eng.kv_stats()
+    assert kv["cached_pages"] > 0        # cancel decref'd, didn't destroy
+    hits0 = kv["prefix_hits"]
+    h2 = eng.submit_request(Request(uid=1, prompt=prompt.copy(), max_new=16))
+    outs = eng.run(500)
+    assert h2.outcome == "completed"
+    assert eng.kv_stats()["prefix_hits"] > hits0   # resubmit spliced cache
+    # and the rerun stream extends the cancelled one's committed prefix
+    assert h2.tokens()[:len(h1.tokens())] == h1.tokens()
+    assert outs[-1].gen_tokens.tolist() == h2.tokens()
+    _assert_clean(eng)
+
+
+def test_cancel_is_idempotent_and_late_cancel_is_noop(backbone):
+    cfg, model, params = backbone
+    eng = _engine(model, params)
+    [h] = [eng.submit_request(r) for r in _reqs(cfg, 1, seed=5, max_new=4)]
+    assert h.cancel() and h.cancel()     # double-request: still one cancel
+    eng.run(500)
+    assert h.outcome == "cancelled"
+    assert eng.stats["cancelled"] == 1   # counted once
+    assert h.cancel() is False           # after the fact: nothing to do
+    _assert_clean(eng)

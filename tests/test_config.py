@@ -1,0 +1,70 @@
+"""EngineConfig / ModelSpec: the one shared CLI + constructor surface.
+
+The contract: every EngineConfig field maps onto a real ServingEngine
+constructor parameter (no silent drift as the engine grows knobs), and
+``to_argv() -> add_args/from_args`` round-trips exactly, so a config can
+be shipped across a process boundary as flags (load_gen re-creating a
+server's engine for stream verification).
+"""
+import argparse
+import inspect
+
+from repro.serving.config import (EngineConfig, ModelSpec,
+                                  format_tenant_weights,
+                                  parse_tenant_weights)
+
+
+def _parse(argv, defaults=None):
+    ap = argparse.ArgumentParser()
+    EngineConfig.add_args(ap, defaults)
+    return EngineConfig.from_args(ap.parse_args(argv))
+
+
+def test_defaults_round_trip():
+    c = EngineConfig()
+    assert _parse(c.to_argv()) == c
+    assert _parse([]) == c               # no flags == defaults
+
+
+def test_nondefault_round_trip():
+    c = EngineConfig(scheduler="sync", num_slots=3, batch_size=4, max_new=7,
+                     bucket=32, sync_every=2, learn=False, kv_pages=48,
+                     kv_page_size=8, prefix_cache=True, prefill_chunk=8,
+                     adaptive_k=True, k_min=2, k_max=5, max_queue=9,
+                     tenant_weights={"gold": 3.0, "free": 1.0},
+                     telemetry=True, profile_dir="/tmp/prof")
+    assert _parse(c.to_argv()) == c
+
+
+def test_engine_kwargs_match_engine_signature():
+    from repro.serving.engine import ServingEngine
+    kw = EngineConfig().engine_kwargs()
+    params = inspect.signature(ServingEngine.__init__).parameters
+    unknown = set(kw) - set(params)
+    assert not unknown, f"EngineConfig fields with no engine param: {unknown}"
+    assert "buckets" in kw and kw["buckets"] == (EngineConfig().bucket,)
+
+
+def test_tenant_weights_parse_format():
+    assert parse_tenant_weights("") is None
+    assert parse_tenant_weights("a:2,b:1") == {"a": 2.0, "b": 1.0}
+    assert parse_tenant_weights("solo") == {"solo": 1.0}
+    w = {"gold": 2.5, "free": 1.0}
+    assert parse_tenant_weights(format_tenant_weights(w)) == w
+
+
+def test_batch_alias():
+    assert _parse(["--batch", "5"]).batch_size == 5
+    assert _parse(["--batch-size", "6"]).batch_size == 6
+
+
+def test_model_spec_round_trip():
+    ap = argparse.ArgumentParser()
+    ModelSpec.add_args(ap)
+    s = ModelSpec.from_args(ap.parse_args(["--arch", "vicuna-7b",
+                                           "--seed", "3",
+                                           "--pretrain-steps", "17"]))
+    assert s == ModelSpec(arch="vicuna-7b", tiny=True, seed=3,
+                          pretrain_steps=17)
+    s2 = ModelSpec.from_args(ap.parse_args(["--full-size"]))
+    assert s2.tiny is False

@@ -1,0 +1,168 @@
+"""submit_request/RequestHandle engine surface: shim equivalence, delta
+streaming, lifecycle timestamps, backpressure, and the lifecycle-counter
+reconciliation the metrics schema gate enforces."""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.core import online
+from repro.models.model import build_model
+from repro.serving import QueueFull, Request, ServingEngine
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "scripts"))
+import check_metrics_schema  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def backbone():
+    cfg = tiny_cfg("vicuna-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _reqs(cfg, n, seed=0, max_new=8, tenant=None, plen=12):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(2, cfg.vocab_size, plen,
+                                        dtype=np.int64).astype(np.int32),
+                    max_new=max_new,
+                    tenant=tenant(i) if tenant else "default")
+            for i in range(n)]
+
+
+def _engine(model, params, **kw):
+    state = online.init_trainer(model, jax.random.PRNGKey(3))
+    kw.setdefault("scheduler", "continuous")
+    kw.setdefault("num_slots", 3)
+    kw.setdefault("max_new", 16)
+    kw.setdefault("buckets", (16,))
+    return ServingEngine(model, params, state, **kw)
+
+
+def test_submit_shim_warns_and_streams_identically(backbone):
+    cfg, model, params = backbone
+    reqs = _reqs(cfg, 5, seed=1)
+
+    eng_new = _engine(model, params)
+    handles = [eng_new.submit_request(r) for r in reqs]
+    new_outs = {c.uid: c.gen_tokens.tolist() for c in eng_new.run(500)}
+
+    eng_old = _engine(model, params)
+    with pytest.warns(DeprecationWarning, match="submit_request"):
+        for r in reqs:
+            eng_old.submit(r)
+    old_outs = {c.uid: c.gen_tokens.tolist() for c in eng_old.run(500)}
+
+    assert old_outs == new_outs          # the shim changes nothing downstream
+    for r in reqs:                       # and the handle saw the same stream
+        assert handles[r.uid].tokens() == new_outs[r.uid]
+
+
+def test_deltas_accumulate_to_completion(backbone):
+    import threading
+
+    cfg, model, params = backbone
+    eng = _engine(model, params)
+    reqs = _reqs(cfg, 4, seed=2)
+    hs = [eng.submit_request(r) for r in reqs]
+    chunks = {h.uid: [] for h in hs}
+
+    def consume(h):                      # one consumer thread per handle,
+        for ch in h.deltas(timeout=120.0):   # as the HTTP layer does
+            chunks[h.uid].append(ch)
+
+    threads = [threading.Thread(target=consume, args=(h,)) for h in hs]
+    for t in threads:
+        t.start()
+    outs = {c.uid: c for c in eng.run(500)}
+    for t in threads:
+        t.join(timeout=120.0)
+        assert not t.is_alive()
+    for h in hs:
+        got = [t for ch in chunks[h.uid] for t in ch]
+        assert got == outs[h.uid].gen_tokens.tolist()
+        assert len(chunks[h.uid]) >= 2   # streamed, not one lump
+        assert h.result(timeout=1.0) is outs[h.uid]
+
+
+def test_lifecycle_timestamps_ordered(backbone):
+    cfg, model, params = backbone
+    eng = _engine(model, params, num_slots=2)
+    hs = [eng.submit_request(r) for r in _reqs(cfg, 4, seed=3)]
+    eng.run(500)
+    for h in hs:
+        assert (h.t_submit <= h.t_admit <= h.t_prefill_done
+                <= h.t_first_token <= h.t_done)
+        t = h.timings()
+        assert all(v is not None and v >= 0 for v in t.values()), t
+        assert t["e2e_s"] == pytest.approx(
+            t["queue_wait_s"] + t["prefill_s"] + t["decode_s"])
+
+
+def test_queue_full_rejects_explicitly(backbone):
+    cfg, model, params = backbone
+    eng = _engine(model, params, max_queue=2)
+    reqs = _reqs(cfg, 5, seed=4, max_new=4)
+    accepted, rejected = [], []
+    for r in reqs:                       # no stepping: queue can't drain
+        try:
+            accepted.append(eng.submit_request(r))
+        except QueueFull as e:
+            rejected.append(e.handle)
+    assert len(accepted) == 2 and len(rejected) == 3
+    for h in rejected:                   # rejection is a terminal outcome,
+        assert h.outcome == "rejected"   # not an invisible drop
+        assert h.result(timeout=1.0) is None
+    eng.run(500)
+    assert all(h.outcome == "completed" for h in accepted)
+    assert eng.stats["submitted"] == 5
+    assert eng.stats["rejected"] == 3
+    assert eng.stats["requests"] == 2
+
+
+def test_lifecycle_counters_reconcile_in_schema_gate(backbone):
+    cfg, model, params = backbone
+    eng = _engine(model, params, max_queue=3,
+                  tenant_weights={"gold": 2.0, "free": 1.0})
+    reqs = _reqs(cfg, 6, seed=5, max_new=4,
+                 tenant=lambda i: "gold" if i % 2 else "free")
+    hs = []
+    for r in reqs:
+        try:
+            hs.append(eng.submit_request(r))
+        except QueueFull:
+            pass
+        if len(hs) == 2:
+            eng.step()                   # drain a little so most get in
+    hs[0].cancel()
+    eng.run(500)
+    snap = eng.metrics_snapshot()
+    errs = check_metrics_schema.check_snapshot(snap, "test")
+    assert errs == [], errs
+    by_tenant = snap["dvi_serving_requests_by_tenant"]["values"]
+    assert sum(by_tenant.values()) == eng.stats["submitted"]
+    assert set(by_tenant) <= {"gold", "free"}
+    # drained: submitted fully accounted
+    assert (eng.stats["submitted"] == eng.stats["requests"]
+            + eng.stats["cancelled"] + eng.stats["rejected"])
+
+
+def test_prometheus_round_trip_carries_labels(backbone):
+    cfg, model, params = backbone
+    from repro.serving.telemetry import parse_prometheus_text
+    eng = _engine(model, params)
+    for r in _reqs(cfg, 3, seed=6, max_new=4,
+                   tenant=lambda i: f"t{i}"):
+        eng.submit_request(r)
+    eng.run(500)
+    back = parse_prometheus_text(eng.render_prometheus())
+    vals = back["dvi_serving_requests_by_tenant"]["values"]
+    assert vals == {"t0": 1, "t1": 1, "t2": 1}
+    assert back["dvi_serving_requests_by_tenant"]["value"] == 3
+    assert back["dvi_serving_ttft_seconds"]["count"] == 3
+    assert back["dvi_serving_queue_wait_seconds"]["count"] == 3
